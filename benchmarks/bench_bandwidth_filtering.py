@@ -1,0 +1,88 @@
+"""Paper Fig. 14 + Table 1: WAN bandwidth reduction vs conflict ratio.
+
+YCSB with calibrated conflict ratios (hot-set contention) at ~5/10/20/30/40%.
+Paper: WAN traffic drops 8.7/27.2/32.2/35.7/40.3% monotonically; filtering
+costs <2.8% CPU and ~0% at conflict-free; p99 shifts <= ~13 ms.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import check, run_engine, wan_cluster
+
+
+# hot_write_frac values calibrated to land near the paper's conflict ratios
+_CONFLICT_KNOBS = [
+    (0.00, 0.0),   # conflict-free control (Table 1 row 1)
+    (0.05, 0.08),
+    (0.10, 0.16),
+    (0.20, 0.33),
+    (0.30, 0.52),
+    (0.40, 0.75),
+]
+
+
+def run(quick: bool = True) -> dict:
+    n = 8
+    epochs = 25 if quick else 120
+    txns = 12 if quick else 25
+    lat, regions, bw, trace = wan_cluster(n, epochs, seed=31)
+
+    rows = []
+    for target, hot in _CONFLICT_KNOBS:
+        base = run_engine(
+            n=n, trace=trace, regions=regions, grouping=True, filtering=False,
+            hot_write_frac=hot, rewrite_frac=0.10, txns_per_node=txns,
+            theta=0.6, n_keys=50_000,
+        )
+        geo = run_engine(
+            n=n, trace=trace, regions=regions, grouping=True, filtering=True,
+            hot_write_frac=hot, rewrite_frac=0.10, txns_per_node=txns,
+            theta=0.6, n_keys=50_000,
+        )
+        achieved_conflict = 1.0 - geo.committed / max(geo.total_txns, 1)
+        reduction = 1.0 - geo.wan_bytes / base.wan_bytes
+        n_updates = geo.white_stats.total_updates
+        cpu_per_update_us = (
+            sum(e.filter_cpu_ms for e in geo.epochs) * 1e3 / max(n_updates, 1)
+        )
+        rows.append({
+            "target_conflict": target,
+            "achieved_conflict": achieved_conflict,
+            "wan_reduction": reduction,
+            "white_byte_ratio": geo.white_stats.white_byte_ratio,
+            "filter_cpu_us_per_update": cpu_per_update_us,
+            "p99_delta_ms": geo.p99_sync_ms - base.p99_sync_ms,
+            "state_consistent": base.state_digest == geo.state_digest,
+        })
+
+    reductions = [r["wan_reduction"] for r in rows]
+    checks = [
+        check(all(r["state_consistent"] for r in rows),
+              "Fig14: filtering is lossless at every conflict level"),
+        check(all(reductions[i] <= reductions[i + 1] + 0.03
+                  for i in range(1, len(reductions) - 1)),
+              "Fig14: WAN reduction grows monotonically with conflict ratio",
+              ", ".join(f"{r['target_conflict']:.0%}->{r['wan_reduction']:.1%}"
+                        for r in rows)),
+        check(rows[0]["wan_reduction"] < 0.12,
+              "Table1: near-zero saving on the conflict-free workload",
+              f"{rows[0]['wan_reduction']:.1%}"),
+        check(reductions[-1] >= 0.30,
+              "Fig14: >=30% WAN reduction at the highest conflict (paper 40.3%)",
+              f"{reductions[-1]:.1%}"),
+        check(
+            max(r["filter_cpu_us_per_update"] for r in rows)
+            < 5.0 * max(min(r["filter_cpu_us_per_update"] for r in rows), 1e-3),
+            "Table1: O(1) filtering — per-update cost flat across conflict "
+            "ratios (paper: constant-time version/hash checks)",
+            ", ".join(f"{r['target_conflict']:.0%}:"
+                      f"{r['filter_cpu_us_per_update']:.1f}us" for r in rows),
+        ),
+    ]
+    return {"figure": "Fig14+Table1", "rows": rows, "checks": checks}
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,76 @@
+"""Paper Fig. 19: the optimal group number.
+
+Makespan reduction over no-grouping as a function of k, for 10- and 15-node
+clusters across two WAN settings; the empirical optimum should sit in the
+guided band around k* = (N^2/2)^(1/3) (paper: empirical optima 4 and 5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    WANSimulator,
+    all_to_all_schedule,
+    hierarchical_schedule,
+    k_search_band,
+    milp_grouping,
+    optimal_k,
+)
+from repro.core.latency import GeoClusterSpec, geo_clustered_matrix, jitter_trace
+
+from .common import check
+
+
+def _sweep(n: int, seed: int, rounds: int) -> dict:
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=4), np.random.default_rng(seed)
+    )
+    from .common import lan_wan_bandwidth
+
+    bw = lan_wan_bandwidth(regions, n, 100.0)
+    trace = jitter_trace(lat, rounds, np.random.default_rng(seed + 1))
+    payload = 100_000.0
+    base = np.mean([
+        WANSimulator(f, bw).run(all_to_all_schedule(n, payload)).makespan_ms
+        for f in trace
+    ])
+    red = {}
+    for k in range(2, min(n - 1, 9)):
+        plan = milp_grouping(lat, k, tiv=True, time_limit_s=15.0)
+        ms = np.mean([
+            WANSimulator(f, bw).run(
+                hierarchical_schedule(plan, payload, lat=f, tiv=True)
+            ).makespan_ms
+            for f in trace
+        ])
+        red[k] = float(1.0 - ms / base)
+    return red
+
+
+def run(quick: bool = True) -> dict:
+    rounds = 25 if quick else 100
+    out = {}
+    checks = []
+    for n, seed in ((10, 71), (15, 73)):
+        red = _sweep(n, seed, rounds)
+        best_k = max(red, key=red.get)
+        band = k_search_band(n, tolerance=1)
+        out[n] = {"reduction_by_k": red, "best_k": best_k,
+                  "k_star": optimal_k(n), "band": band}
+        checks.append(check(
+            min(abs(best_k - b) for b in band) <= 1,
+            f"Fig19 (N={n}): empirical optimum k={best_k} within the k* band "
+            f"{band} (k*={optimal_k(n):.1f})",
+        ))
+        checks.append(check(
+            red[best_k] > 0.05,
+            f"Fig19 (N={n}): best grouping gives a real reduction",
+            f"{red[best_k]:.1%}",
+        ))
+    return {"figure": "Fig19",
+            "results": {str(k): v for k, v in out.items()}, "checks": checks}
+
+
+if __name__ == "__main__":
+    run(quick=False)

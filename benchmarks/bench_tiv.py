@@ -1,0 +1,70 @@
+"""Paper Fig. 5: prevalence of Triangle Inequality Violations on WAN data.
+
+The paper reports 28-57% of node pairs violating the triangle inequality
+across 3 real-world WAN datasets (Alibaba inter-region metrics, AWS network
+manager, WonderNetwork pings).  We evaluate three analogous latency sources:
+the AWS-style 10-region matrix (static + jittered) and two synthetic
+geo-clustered deployments with realistic congestion.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    GeoClusterSpec,
+    aws_latency_matrix,
+    geo_clustered_matrix,
+    jitter_trace,
+    tiv_fraction,
+)
+
+from .common import check
+
+
+def run(quick: bool = True) -> dict:
+    n_rounds = 50 if quick else 300
+    results = {}
+
+    # dataset 1: AWS-style matrix, averaged over jittered rounds
+    base = aws_latency_matrix()
+    trace = jitter_trace(base, n_rounds, np.random.default_rng(0))
+    fr = [tiv_fraction(f) for f in trace]
+    results["aws"] = float(np.mean(fr))
+
+    # dataset 2: WonderNetwork-like dense global deployment (more nodes,
+    # heavier congestion asymmetry)
+    lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=20, n_clusters=6, congestion_frac=0.22,
+                       congestion_mult=(1.4, 2.5)),
+        np.random.default_rng(1),
+    )
+    tr2 = jitter_trace(lat, n_rounds, np.random.default_rng(2))
+    results["wondernet_like"] = float(np.mean([tiv_fraction(f) for f in tr2]))
+
+    # dataset 3: Alibaba-like regional deployment (fewer regions, moderate)
+    lat3, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=12, n_clusters=3, congestion_frac=0.3,
+                       congestion_mult=(1.3, 2.5)),
+        np.random.default_rng(3),
+    )
+    tr3 = jitter_trace(lat3, n_rounds, np.random.default_rng(4))
+    results["alibaba_like"] = float(np.mean([tiv_fraction(f) for f in tr3]))
+
+    checks = [
+        check(
+            all(0.20 <= v <= 0.65 for v in results.values()),
+            "Fig5: TIV prevalence across 3 WAN datasets in/near the paper's 28-57% band",
+            ", ".join(f"{k}={v:.1%}" for k, v in results.items()),
+        ),
+        check(
+            max(results.values()) >= 0.28,
+            "Fig5: at least one dataset reaches the paper's lower bound 28%",
+            f"max={max(results.values()):.1%}",
+        ),
+    ]
+    return {"figure": "Fig5", "tiv_fraction": results, "checks": checks}
+
+
+if __name__ == "__main__":
+    run(quick=False)

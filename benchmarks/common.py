@@ -1,0 +1,127 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    YCSBConfig,
+    YCSBGenerator,
+    aws_latency_matrix,
+    bandwidth_matrix,
+    geo_clustered_matrix,
+    jitter_trace,
+)
+
+PASS = "PASS"
+FAIL = "FAIL"
+
+
+def check(cond: bool, claim: str, detail: str = "") -> dict:
+    status = PASS if cond else FAIL
+    print(f"  [{status}] {claim}" + (f"  ({detail})" if detail else ""))
+    return {"claim": claim, "status": status, "detail": detail}
+
+
+def paper_testbed(n_rounds: int, seed: int = 0):
+    """5-node testbed like the paper's: 2 Kalgan + 2 Hohhot + 1 Hong Kong.
+
+    Kalgan<->Hohhot ~ 8 ms (both Inner Mongolia region), either <-> HK ~ 42 ms,
+    intra-site < 2 ms.  Jitter is mild and spikes rare: the paper's testbed
+    runs on Alibaba Cloud's intra-China backbone, far more stable than
+    intercontinental WAN paths.
+    """
+    base = np.array(
+        [
+            # K1    K2    H1    H2    HK
+            [0.0,  1.5,  8.0,  8.5, 42.0],
+            [1.5,  0.0,  8.2,  8.0, 43.0],
+            [8.0,  8.2,  0.0,  1.8, 38.0],
+            [8.5,  8.0,  1.8,  0.0, 39.0],
+            [42.0, 43.0, 38.0, 39.0, 0.0],
+        ]
+    )
+    # Kalgan and Hohhot share the Inner-Mongolia backbone (one region, fast
+    # interconnect); Hong Kong is the WAN-separated site — matching the
+    # paper's deployment and its Fig. 3 bandwidth-constrained regime.
+    regions = np.array([0, 0, 0, 0, 1])
+    trace = jitter_trace(
+        base, n_rounds, np.random.default_rng(seed),
+        rel_sigma=0.04, spike_prob=0.002, spike_mult=(1.3, 1.8),
+    )
+    return base, regions, trace
+
+
+def wan_cluster(n: int, n_rounds: int, seed: int = 0, **spec_kw):
+    spec = GeoClusterSpec(n_nodes=n, n_clusters=max(2, min(5, n // 3)), **spec_kw)
+    rng = np.random.default_rng(seed)
+    lat, regions = geo_clustered_matrix(spec, rng)
+    bw = bandwidth_matrix(regions, n, rng)
+    trace = jitter_trace(lat, n_rounds, np.random.default_rng(seed + 1))
+    return lat, regions, bw, trace
+
+
+def lan_wan_bandwidth(regions, n: int, wan_mbps: float,
+                      lan_mbps: float = 10_000.0):
+    """Bandwidth matrix with the paper's LAN >> WAN asymmetry (Sec 2.2)."""
+    regions = np.asarray(regions)
+    same = regions[:, None] == regions[None, :]
+    bw = np.where(same, lan_mbps, wan_mbps).astype(float)
+    np.fill_diagonal(bw, np.inf)
+    return bw
+
+
+def run_engine(
+    *,
+    n: int,
+    trace,
+    regions,
+    grouping: bool,
+    filtering: bool,
+    tiv: bool = True,
+    compression: bool = False,
+    bandwidth=200.0,
+    loss=0.0,
+    theta: float = 0.7,
+    read_ratio: float = 0.5,
+    hot_write_frac: float = 0.25,
+    rewrite_frac: float = 0.05,
+    txns_per_node: int = 10,
+    n_epochs: int | None = None,
+    n_keys: int = 5_000,
+    value_bytes: int = 100,
+    planner: str = "milp",
+    seed: int = 7,
+):
+    cfg = EngineConfig(
+        n_nodes=n, grouping=grouping, filtering=filtering, tiv=tiv,
+        compression=compression, planner=planner,
+    )
+    wan_mask = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    if np.isscalar(bandwidth) and np.isfinite(bandwidth):
+        bandwidth = lan_wan_bandwidth(regions, n, float(bandwidth))
+    eng = GeoCluster(cfg, bandwidth_mbps=bandwidth, loss=loss,
+                     wan_mask=wan_mask, seed=seed)
+    gen = YCSBGenerator(
+        YCSBConfig(
+            n_keys=n_keys, theta=theta, read_ratio=read_ratio,
+            hot_write_frac=hot_write_frac, hot_locality=True,
+            rewrite_frac=rewrite_frac, value_bytes=value_bytes,
+        ),
+        n, seed=seed + 1, node_region=regions,
+    )
+    return eng.run(gen, trace, txns_per_node=txns_per_node, n_epochs=n_epochs)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,96 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick mode
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale rounds
+    PYTHONPATH=src python -m benchmarks.run --only Fig9,Fig14+Table1
+
+Each module reproduces one artifact of the paper and validates the result
+against the paper's claims; results land in results/benchmarks.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+from . import (
+    bench_bandwidth_filtering,
+    bench_comm_heatmap,
+    bench_compression,
+    bench_group_number,
+    bench_grouping_strategies,
+    bench_loss_jitter,
+    bench_makespan_cdf,
+    bench_scaling_cost_benefit,
+    bench_skew,
+    bench_sync_strategies,
+    bench_throughput,
+    bench_tiv,
+)
+
+MODULES = [
+    ("Fig5", bench_tiv),
+    ("Fig9", bench_makespan_cdf),
+    ("Fig10", bench_comm_heatmap),
+    ("Fig11", bench_throughput),
+    ("Fig12", bench_grouping_strategies),
+    ("Fig13", bench_scaling_cost_benefit),
+    ("Fig14+Table1", bench_bandwidth_filtering),
+    ("Fig16", bench_compression),
+    ("Fig17", bench_loss_jitter),
+    ("Fig18", bench_skew),
+    ("Fig19", bench_group_number),
+    ("sync-strategies", bench_sync_strategies),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated figure names")
+    ap.add_argument("--out", default="results/benchmarks.json")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    all_results = {}
+    n_pass = n_fail = n_err = 0
+    t_start = time.perf_counter()
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {mod.__name__} ===")
+        t0 = time.perf_counter()
+        try:
+            res = mod.run(quick=not args.full)
+            res["seconds"] = round(time.perf_counter() - t0, 1)
+            for c in res.get("checks", []):
+                if c["status"] == "PASS":
+                    n_pass += 1
+                else:
+                    n_fail += 1
+            all_results[name] = res
+        except Exception as e:
+            n_err += 1
+            print(f"  [ERROR] {type(e).__name__}: {e}")
+            all_results[name] = {
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+        print(f"  ({time.perf_counter() - t0:.1f}s)")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_results, f, indent=1, default=str)
+    total = time.perf_counter() - t_start
+    print(f"\n==== benchmark summary: {n_pass} checks passed, "
+          f"{n_fail} failed, {n_err} errored, {total:.0f}s ====")
+    print(f"results -> {args.out}")
+    if n_fail or n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

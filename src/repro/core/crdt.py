@@ -1,0 +1,143 @@
+"""Delta-CRDT replication state (paper Sec 4.4, "Correctness under ...").
+
+GeoCoCo inherits GeoGauss's epoch-aware delta-CRDT model: per-key
+last-writer-wins registers under a total version order.  The merge operator
+is the lattice join (max by version), which is **commutative, associative and
+idempotent (ACI)** — the algebraic foundation for correctness under message
+reordering, duplication and delayed delivery.  Property tests in
+``tests/test_property_crdt.py`` verify ACI and the permutation/multiplicity
+invariance equation from Sec 4.4 directly.
+
+A :class:`Version` is the tuple ``(epoch, seq, node)``; versions are unique
+per update and totally ordered, so ``merge`` is deterministic everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import ClassVar, Iterable, Mapping
+
+__all__ = ["Version", "Update", "DeltaCRDTStore", "merge_updates"]
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Version:
+    epoch: int
+    seq: int          # deterministic within-epoch order (e.g. commit timestamp)
+    node: int         # tie-break: origin replica id
+
+    ZERO: ClassVar["Version"]
+
+
+Version.ZERO = Version(-1, -1, -1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Update:
+    """A delta: one versioned write to one key."""
+
+    key: str
+    value: bytes
+    version: Version
+    txn_id: int = -1
+
+    @property
+    def nbytes(self) -> int:
+        # key + value payload + fixed version/txn metadata
+        return len(self.key) + len(self.value) + 24
+
+    def meta_only(self) -> "Update":
+        """Payload-stripped wire form (key + version metadata, no value).
+
+        Used for byte accounting of null-effect white data: the receiver
+        reconstructs the full update from its own snapshot, so only this
+        form crosses the WAN.  Never applied to a store directly.
+        """
+        return dataclasses.replace(self, value=b"")
+
+
+class DeltaCRDTStore:
+    """Per-key LWW-register map with ACI merge."""
+
+    def __init__(self, node_id: int = -1):
+        self.node_id = node_id
+        self._data: dict[str, tuple[bytes, Version]] = {}
+
+    # -- reads ---------------------------------------------------------------
+
+    def get(self, key: str) -> bytes | None:
+        ent = self._data.get(key)
+        return ent[0] if ent is not None else None
+
+    def version_of(self, key: str) -> Version:
+        ent = self._data.get(key)
+        return ent[1] if ent is not None else Version.ZERO
+
+    def keys(self) -> Iterable[str]:
+        return self._data.keys()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    # -- merge (the CRDT join) -------------------------------------------------
+
+    def apply(self, u: Update) -> bool:
+        """Join one update into the store.  Returns True iff state changed.
+
+        Idempotent (re-applying is a no-op) and commutative/associative across
+        updates because the winner is the version-order maximum.  System
+        invariant (enforced by OCC version assignment): for a given
+        ``(key, version)`` the underlying full payload is unique — a
+        same-version duplicate is either an identical re-delivery or the
+        payload-stripped (meta-only) form of the same update.
+        """
+        cur = self._data.get(u.key)
+        if cur is not None and cur[1] >= u.version:
+            return False
+        self._data[u.key] = (u.value, u.version)
+        return True
+
+    def apply_many(self, updates: Iterable[Update]) -> int:
+        return sum(self.apply(u) for u in updates)
+
+    def merge_store(self, other: "DeltaCRDTStore") -> None:
+        for key, (val, ver) in other._data.items():
+            self.apply(Update(key, val, ver))
+
+    # -- state equality / digests ----------------------------------------------
+
+    def value_state(self) -> dict[str, bytes]:
+        return {k: v for k, (v, _) in self._data.items()}
+
+    def full_state(self) -> dict[str, tuple[bytes, Version]]:
+        return dict(self._data)
+
+    def digest(self, *, values_only: bool = False) -> str:
+        h = hashlib.sha256()
+        for k in sorted(self._data):
+            v, ver = self._data[k]
+            h.update(k.encode())
+            h.update(v)
+            if not values_only:
+                h.update(f"{ver.epoch}:{ver.seq}:{ver.node}".encode())
+        return h.hexdigest()
+
+    def snapshot(self) -> "DeltaCRDTStore":
+        s = DeltaCRDTStore(self.node_id)
+        s._data = dict(self._data)
+        return s
+
+
+def merge_updates(updates: Iterable[Update]) -> dict[str, Update]:
+    """Pure merge of a batch: per-key version-order maximum.
+
+    ``merge_updates(perm_with_dups(U)) == merge_updates(U)`` for any
+    permutation and multiplicity — the Sec 4.4 invariance equation.
+    """
+    out: dict[str, Update] = {}
+    for u in updates:
+        cur = out.get(u.key)
+        if cur is None or u.version > cur.version:
+            out[u.key] = u
+    return out

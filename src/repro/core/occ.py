@@ -1,0 +1,106 @@
+"""Epoch-based optimistic concurrency control (GeoGauss-style, paper Sec 4.3).
+
+Multi-master execution model: every replica executes transactions locally
+against its (replicated) snapshot during an epoch, then exchanges batched
+write sets.  Validation is deterministic and identical at every replica:
+
+* **Write-write rule (first-writer-wins, no reinstatement)**: for each key
+  written in the epoch, the writer with the smallest version wins the key.
+  A transaction *aborts* iff it loses any key it writes — regardless of
+  whether the winner itself later aborts.  This deliberately avoids cascaded
+  reinstatement so the decision is computable from raw write-set overlap
+  alone; crucially it makes *intra-group* abort detection at an aggregator
+  sound: losing a key to any same-epoch writer is final (Sec 4.3 step 2).
+* **Read validation**: a transaction aborts if any read version is stale
+  w.r.t. the epoch-start snapshot (models delayed/stale reads).
+
+Committed writes become :class:`~repro.core.crdt.Update` deltas and merge via
+the CRDT join.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+from .crdt import DeltaCRDTStore, Update, Version
+
+__all__ = ["Txn", "validate_epoch", "committed_updates", "txn_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Txn:
+    """One transaction executed optimistically at ``node`` during ``epoch``.
+
+    ``seq`` is the node-local commit timestamp; the global deterministic order
+    is by ``Version(epoch, seq, node)``.
+    """
+
+    txn_id: int
+    node: int
+    epoch: int
+    seq: int
+    read_set: tuple[tuple[str, Version], ...] = ()
+    write_set: tuple[tuple[str, bytes], ...] = ()
+
+    @property
+    def version(self) -> Version:
+        return Version(self.epoch, self.seq, self.node)
+
+    def writes_keys(self) -> tuple[str, ...]:
+        return tuple(k for k, _ in self.write_set)
+
+
+def txn_updates(txn: Txn) -> list[Update]:
+    """The delta updates a transaction would produce if committed."""
+    return [
+        Update(key=k, value=v, version=txn.version, txn_id=txn.txn_id)
+        for k, v in txn.write_set
+    ]
+
+
+def validate_epoch(
+    txns: Sequence[Txn], snapshot: DeltaCRDTStore | None = None
+) -> tuple[set[int], set[int]]:
+    """Deterministic epoch validation.  Returns (committed_ids, aborted_ids).
+
+    Works on any subset of the epoch's transactions; running it on a group's
+    local subset yields abort decisions that are a *sound under-approximation*
+    of the global outcome (a transaction aborted locally is aborted globally,
+    because first-writer-wins per key is monotone under adding more writers).
+    """
+    aborted: set[int] = set()
+    # read validation against the epoch-start snapshot
+    if snapshot is not None:
+        for t in txns:
+            for key, ver in t.read_set:
+                if snapshot.version_of(key) > ver:
+                    aborted.add(t.txn_id)
+                    break
+    # first-writer-wins per key
+    winners: dict[str, Version] = {}
+    by_key: dict[str, list[Txn]] = {}
+    for t in txns:
+        for k in t.writes_keys():
+            by_key.setdefault(k, []).append(t)
+            v = t.version
+            if k not in winners or v < winners[k]:
+                winners[k] = v
+    for k, writers in by_key.items():
+        for t in writers:
+            if t.version != winners[k]:
+                aborted.add(t.txn_id)
+    committed = {t.txn_id for t in txns} - aborted
+    return committed, aborted
+
+
+def committed_updates(
+    txns: Sequence[Txn], snapshot: DeltaCRDTStore | None = None
+) -> tuple[list[Update], set[int]]:
+    """Validate and emit the updates of committed transactions."""
+    committed, aborted = validate_epoch(txns, snapshot)
+    ups: list[Update] = []
+    for t in txns:
+        if t.txn_id in committed:
+            ups.extend(txn_updates(t))
+    return ups, aborted

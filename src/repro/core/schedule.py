@@ -1,0 +1,217 @@
+"""Transmission schedules (paper Sec 4.4: Consistency-Guaranteed Transmission).
+
+A :class:`TransmissionSchedule` is an ordered list of *phases*; transfers
+within a phase run in parallel, phases are barrier-synchronized (epoch
+boundaries forbid cross-round pipelining — Sec 6.2 "we focus on per-round
+performance").  Builders:
+
+* :func:`all_to_all_schedule` — the flat baseline: ``n(n-1)`` point-to-point
+  transfers in one phase.
+* :func:`hierarchical_schedule` — GeoCoCo's 3-phase flow: members->aggregator,
+  aggregator<->aggregator (optionally over TIV relay paths), aggregator->members.
+* :func:`leader_schedule` — single-leader (Raft-ish) dissemination, used by the
+  CockroachDB-plane model; GeoCoCo groups the followers.
+
+Per-node message-count accounting backs the paper's round guarantee
+(Eq. 6-7): ``C_geococo <= C_baseline = 2(N-1)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .latency import one_relay_effective
+from .planner import GroupPlan
+
+__all__ = [
+    "Transfer",
+    "TransmissionSchedule",
+    "all_to_all_schedule",
+    "hierarchical_schedule",
+    "leader_schedule",
+    "messages_per_node",
+    "max_messages_per_node",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """One point-to-point payload movement.
+
+    ``via >= 0`` marks an application-layer relay (overlay TIV exploitation):
+    the simulator charges ``lat[src,via] + lat[via,dst]`` propagation and the
+    bottleneck bandwidth of the two hops, and the relay node's message counters
+    are charged one receive + one send.
+    """
+
+    src: int
+    dst: int
+    nbytes: float
+    via: int = -1
+    tag: str = ""
+
+
+@dataclasses.dataclass
+class TransmissionSchedule:
+    phases: list[list[Transfer]]
+    label: str = ""
+
+    @property
+    def n_transfers(self) -> int:
+        return sum(len(p) for p in self.phases)
+
+    @property
+    def total_bytes(self) -> float:
+        # relayed transfers traverse two WAN hops
+        return float(
+            sum(t.nbytes * (2.0 if t.via >= 0 else 1.0) for p in self.phases for t in p)
+        )
+
+    def all_transfers(self) -> Iterable[Transfer]:
+        for p in self.phases:
+            yield from p
+
+
+def all_to_all_schedule(
+    n: int, payload_bytes: np.ndarray | float, *, label: str = "all_to_all"
+) -> TransmissionSchedule:
+    """Flat baseline: every node sends its update batch to every other node.
+
+    ``payload_bytes`` is a scalar or per-source vector (node i's batch size).
+    """
+    pay = np.broadcast_to(np.asarray(payload_bytes, dtype=float), (n,))
+    phase = [
+        Transfer(i, j, float(pay[i]), tag="a2a")
+        for i in range(n)
+        for j in range(n)
+        if i != j
+    ]
+    return TransmissionSchedule([phase], label=label)
+
+
+def hierarchical_schedule(
+    plan: GroupPlan,
+    payload_bytes: np.ndarray | float,
+    *,
+    group_payload_bytes: np.ndarray | None = None,
+    lat: np.ndarray | None = None,
+    tiv: bool = False,
+    tiv_margin: float = 0.05,
+    label: str = "geococo",
+) -> TransmissionSchedule:
+    """GeoCoCo's hierarchical 3-phase round (Fig. 8).
+
+    Phase 1 (intra, gather):   each simple node -> its aggregator.
+    Phase 2 (inter, exchange): each aggregator -> every other aggregator, with
+        the *consolidated group payload* (post filtering/aggregation).  When
+        ``tiv`` and ``lat`` are given, pairs with a profitable one-relay path
+        are routed ``via`` that relay (Sec 5 overlay implementation).
+    Phase 3 (intra, scatter):  each aggregator -> its simple nodes with the
+        merged global result.
+
+    ``group_payload_bytes[j]``, if given, is group j's post-filter consolidated
+    payload; by default it is the sum of member payloads (no filtering, no
+    dedup).  The phase-3 broadcast payload is the merged global state delta:
+    the sum of all group payloads (every member must receive every surviving
+    remote update, matching full replication).
+    """
+    # node ids need not be contiguous (e.g. after a drop_node failover)
+    n = max(i for g in plan.groups for i in g) + 1
+    pay = np.broadcast_to(np.asarray(payload_bytes, dtype=float), (n,))
+    if group_payload_bytes is None:
+        gp = np.array([sum(pay[i] for i in g) for g in plan.groups])
+    else:
+        gp = np.asarray(group_payload_bytes, dtype=float)
+        if gp.shape != (plan.k,):
+            raise ValueError(f"group_payload_bytes must have shape ({plan.k},)")
+
+    relay = None
+    if tiv and lat is not None:
+        _, relay = one_relay_effective(lat, margin=tiv_margin)
+
+    phase1: list[Transfer] = []
+    for g, a in zip(plan.groups, plan.aggregators):
+        for i in g:
+            if i != a:
+                phase1.append(Transfer(i, a, float(pay[i]), tag="gather"))
+
+    phase2: list[Transfer] = []
+    for j1, a1 in enumerate(plan.aggregators):
+        for j2, a2 in enumerate(plan.aggregators):
+            if j1 == j2:
+                continue
+            via = -1
+            if relay is not None:
+                via = int(relay[a1, a2])
+            phase2.append(Transfer(a1, a2, float(gp[j1]), via=via, tag="exchange"))
+
+    total = float(gp.sum())
+    phase3: list[Transfer] = []
+    for j, (g, a) in enumerate(zip(plan.groups, plan.aggregators)):
+        # members receive the merged result minus what they already hold
+        # locally (their own contribution stayed local): charge total - pay[i].
+        for i in g:
+            if i != a:
+                phase3.append(
+                    Transfer(a, i, max(total - float(pay[i]), 0.0), tag="scatter")
+                )
+
+    phases = [p for p in (phase1, phase2, phase3) if p]
+    return TransmissionSchedule(phases, label=label)
+
+
+def leader_schedule(
+    n: int,
+    leader: int,
+    payload_bytes: float,
+    plan: GroupPlan | None = None,
+    *,
+    label: str = "leader",
+) -> TransmissionSchedule:
+    """Single-leader replication (CRDB/Raft plane).
+
+    Without a plan: leader -> each follower directly (flat AppendEntries
+    fan-out).  With a plan: leader -> each group aggregator -> group members
+    (GeoCoCo hooked into RaftTransport, Sec 5 "Extensions").
+    """
+    if plan is None:
+        phase = [
+            Transfer(leader, i, payload_bytes, tag="append")
+            for i in range(n)
+            if i != leader
+        ]
+        return TransmissionSchedule([phase], label=label)
+    phase1: list[Transfer] = []
+    phase2: list[Transfer] = []
+    for g, a in zip(plan.groups, plan.aggregators):
+        tgt = a if leader not in g else leader
+        if tgt != leader:
+            phase1.append(Transfer(leader, tgt, payload_bytes, tag="append"))
+        for i in g:
+            if i != tgt and i != leader:
+                phase2.append(Transfer(tgt, i, payload_bytes, tag="relay"))
+    phases = [p for p in (phase1, phase2) if p]
+    return TransmissionSchedule(phases, label=label + "+geococo")
+
+
+# ---------------------------------------------------------------------------
+# Round-count accounting (Eq. 6-7)
+# ---------------------------------------------------------------------------
+
+
+def messages_per_node(schedule: TransmissionSchedule, n: int) -> np.ndarray:
+    """Total messages (sends + receives, relays counted) per node."""
+    cnt = np.zeros(n, dtype=int)
+    for t in schedule.all_transfers():
+        cnt[t.src] += 1
+        cnt[t.dst] += 1
+        if t.via >= 0:
+            cnt[t.via] += 2  # relay receives and forwards
+    return cnt
+
+
+def max_messages_per_node(schedule: TransmissionSchedule, n: int) -> int:
+    return int(messages_per_node(schedule, n).max())

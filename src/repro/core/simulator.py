@@ -1,0 +1,187 @@
+"""Trace-driven WAN simulator (paper Sec 6.1, "Trace-driven Simulation").
+
+Executes a :class:`~repro.core.schedule.TransmissionSchedule` against latency
+and bandwidth matrices (optionally with packet loss and retransmission
+timeouts), producing the round *makespan*, per-node/per-link byte counters
+and per-pair message-frequency matrices — the raw measurements behind the
+paper's Figs. 9, 10, 13, 14, 16 and 17.
+
+Transfer-time model (one transfer of ``B`` bytes over link (s, d)):
+
+    t = propagation(s, d) + B * 8 * c / bandwidth(s, d)        [ms]
+
+where ``c`` is the **access-link contention factor**: within a phase, a
+node's NIC serializes its concurrent flows, so each flow effectively gets
+``bw / max(out_degree(src), in_degree(dst))``.  This is what makes the flat
+all-to-all expensive in practice (every node carries n-1 concurrent flows)
+and aggregation cheap (degree <= group size) — the economics behind the
+paper's Fig. 3 and Sec 2.2.
+
+Propagation is inflated by expected retransmissions under loss ``p``
+(geometric retries, each costing timeout ``tau``):
+
+    t += (p / (1 - p)) * tau
+
+Relayed transfers (``via >= 0``) pay both hops' propagation and both hops'
+(contended) serialization — a user-space store-and-forward overlay relay.
+
+Phases are barrier-synchronized; the makespan of a round is the sum of the
+phase maxima (the paper's Eq. 1 objective generalized to include transmission
+time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .schedule import Transfer, TransmissionSchedule
+
+__all__ = ["WANSimulator", "RoundResult"]
+
+
+@dataclasses.dataclass
+class RoundResult:
+    makespan_ms: float
+    phase_ms: list[float]
+    bytes_out: np.ndarray          # per node, WAN egress (matches NIC counters, Sec 6.1)
+    bytes_in: np.ndarray
+    msg_matrix: np.ndarray         # (n, n) message counts, src -> dst
+    link_bytes: np.ndarray         # (n, n) bytes moved per directed link
+    n_transfers: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(self.link_bytes.sum())
+
+
+class WANSimulator:
+    """Simulates schedule execution over a given network state."""
+
+    def __init__(
+        self,
+        latency_ms: np.ndarray,
+        bandwidth_mbps: np.ndarray | float = np.inf,
+        *,
+        loss: np.ndarray | float = 0.0,
+        retx_timeout_ms: float = 200.0,
+        rng: np.random.Generator | None = None,
+        stochastic_loss: bool = False,
+    ):
+        self.lat = np.asarray(latency_ms, dtype=float)
+        n = self.lat.shape[0]
+        self.n = n
+        bw = np.asarray(bandwidth_mbps, dtype=float)
+        self.bw = np.broadcast_to(bw, (n, n)).copy() if bw.ndim < 2 else bw.copy()
+        self.loss = np.broadcast_to(np.asarray(loss, dtype=float), (n, n))
+        self.retx_timeout_ms = retx_timeout_ms
+        self.rng = rng or np.random.default_rng(0)
+        self.stochastic_loss = stochastic_loss
+
+    # -- single-transfer cost ------------------------------------------------
+
+    def _hop_time(self, s: int, d: int, nbytes: float,
+                  contention: float = 1.0) -> float:
+        prop = self.lat[s, d]
+        p = float(self.loss[s, d])
+        if p > 0.0:
+            if self.stochastic_loss:
+                retries = self.rng.geometric(1.0 - p) - 1
+                prop += retries * self.retx_timeout_ms
+            else:
+                prop += (p / (1.0 - p)) * self.retx_timeout_ms
+        bw = self.bw[s, d]
+        tx = (
+            0.0
+            if not np.isfinite(bw)
+            else nbytes * 8.0 * contention / (bw * 1e6) * 1e3
+        )
+        return prop + tx
+
+    def transfer_time_ms(self, t: Transfer, out_deg=None, in_deg=None) -> float:
+        def c(s, d):
+            if out_deg is None:
+                return 1.0
+            return float(max(out_deg[s], in_deg[d], 1))
+
+        if t.via < 0:
+            return self._hop_time(t.src, t.dst, t.nbytes, c(t.src, t.dst))
+        return self._hop_time(
+            t.src, t.via, t.nbytes, c(t.src, t.via)
+        ) + self._hop_time(t.via, t.dst, t.nbytes, c(t.via, t.dst))
+
+    # -- full round ----------------------------------------------------------
+
+    def run(self, schedule: TransmissionSchedule) -> RoundResult:
+        n = self.n
+        bytes_out = np.zeros(n)
+        bytes_in = np.zeros(n)
+        msg = np.zeros((n, n), dtype=int)
+        link = np.zeros((n, n))
+        phase_ms: list[float] = []
+        for phase in schedule.phases:
+            if not phase:
+                phase_ms.append(0.0)
+                continue
+            # NIC contention: concurrent flows within the phase share each
+            # node's access link.
+            out_deg = np.zeros(n, dtype=int)
+            in_deg = np.zeros(n, dtype=int)
+            for t in phase:
+                if t.via < 0:
+                    out_deg[t.src] += 1
+                    in_deg[t.dst] += 1
+                else:
+                    out_deg[t.src] += 1
+                    in_deg[t.via] += 1
+                    out_deg[t.via] += 1
+                    in_deg[t.dst] += 1
+            tmax = 0.0
+            for t in phase:
+                tt = self.transfer_time_ms(t, out_deg, in_deg)
+                tmax = max(tmax, tt)
+                if t.via < 0:
+                    bytes_out[t.src] += t.nbytes
+                    bytes_in[t.dst] += t.nbytes
+                    msg[t.src, t.dst] += 1
+                    link[t.src, t.dst] += t.nbytes
+                else:
+                    bytes_out[t.src] += t.nbytes
+                    bytes_in[t.via] += t.nbytes
+                    bytes_out[t.via] += t.nbytes
+                    bytes_in[t.dst] += t.nbytes
+                    msg[t.src, t.via] += 1
+                    msg[t.via, t.dst] += 1
+                    link[t.src, t.via] += t.nbytes
+                    link[t.via, t.dst] += t.nbytes
+            phase_ms.append(tmax)
+        return RoundResult(
+            makespan_ms=float(sum(phase_ms)),
+            phase_ms=phase_ms,
+            bytes_out=bytes_out,
+            bytes_in=bytes_in,
+            msg_matrix=msg,
+            link_bytes=link,
+            n_transfers=schedule.n_transfers,
+        )
+
+    # -- bounds ----------------------------------------------------------------
+
+    def lower_bound_ms(self, payload_bytes: float = 0.0) -> float:
+        """Theoretical optimum for one all-to-all round (Fig 9 "Low Bound").
+
+        Every pair must exchange its payload; no schedule beats the all-pairs
+        shortest-path latency of the slowest pair plus its serialization time.
+        """
+        from .latency import all_pairs_shortest
+
+        sp = all_pairs_shortest(self.lat)
+        n = self.n
+        mask = ~np.eye(n, dtype=bool)
+        prop = sp[mask].max()
+        if payload_bytes > 0.0 and np.isfinite(self.bw).any():
+            tx = payload_bytes * 8.0 / (self.bw[mask].max() * 1e6) * 1e3
+        else:
+            tx = 0.0
+        return float(prop + tx)

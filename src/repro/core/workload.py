@@ -1,0 +1,273 @@
+"""Workload generators: YCSB (Zipfian) and TPC-C-style mixes (paper Sec 6.1).
+
+YCSB: key-value operations with Zipfian access skew controlled by theta;
+read/write ratio configurable (Fig 18 varies theta in 0.5..0.9 under 95/5 and
+50/50 mixes; Fig 14 / Table 1 sweep conflict ratios).
+
+TPC-C: the paper's four custom mixes over the five official transaction
+types — TPCC-A (write-intensive), TPCC-B (read-intensive), TPCC-C (balanced),
+TPCC-D (real-time).  Transactions touch warehouse-scoped keys with a small
+cross-warehouse probability, matching NewOrder's remote-item behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from .crdt import DeltaCRDTStore, Version
+from .occ import Txn
+
+__all__ = [
+    "ZipfianSampler",
+    "YCSBConfig",
+    "YCSBGenerator",
+    "TPCC_MIXES",
+    "TPCCConfig",
+    "TPCCGenerator",
+]
+
+
+class ZipfianSampler:
+    """Bounded Zipfian sampler: P(rank r) ∝ 1 / r^theta over n_keys items.
+
+    theta=0 is uniform; theta→1+ concentrates on a hot head.  Ranks are
+    shuffled onto key ids so that "hot" keys are spread across the keyspace.
+    """
+
+    def __init__(self, n_keys: int, theta: float, rng: np.random.Generator):
+        if n_keys <= 0:
+            raise ValueError("n_keys must be positive")
+        ranks = np.arange(1, n_keys + 1, dtype=float)
+        p = ranks ** (-theta)
+        self.p = p / p.sum()
+        self.perm = rng.permutation(n_keys)
+        self.n_keys = n_keys
+
+    def sample(self, rng: np.random.Generator, size: int) -> np.ndarray:
+        r = rng.choice(self.n_keys, size=size, p=self.p)
+        return self.perm[r]
+
+
+@dataclasses.dataclass
+class YCSBConfig:
+    n_keys: int = 10_000
+    theta: float = 0.7
+    read_ratio: float = 0.5
+    ops_per_txn: int = 4
+    value_bytes: int = 100
+    # fraction of write ops redirected to a tiny shared hot set — the knob the
+    # benchmarks use to hit the paper's target conflict ratios exactly
+    hot_write_frac: float = 0.0
+    hot_set_size: int = 16
+    # fraction of writes that re-write the key's current value (no-op UPSERTs;
+    # the "null or sparse data" class of white data)
+    rewrite_frac: float = 0.0
+    # when True (and the generator is given node regions), each region has its
+    # own hot set — the paper's workload-locality assumption (Sec 6.6):
+    # conflicts concentrate within latency-proximate groups
+    hot_locality: bool = False
+
+
+class YCSBGenerator:
+    """Generates per-node, per-epoch transaction batches."""
+
+    def __init__(
+        self,
+        cfg: YCSBConfig,
+        n_nodes: int,
+        seed: int = 0,
+        node_region: Sequence[int] | None = None,
+    ):
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.rng = np.random.default_rng(seed)
+        self.sampler = ZipfianSampler(cfg.n_keys, cfg.theta, self.rng)
+        self.node_region = (
+            np.asarray(node_region) if node_region is not None else np.zeros(n_nodes, dtype=int)
+        )
+        self._txn_counter = 0
+
+    def _value(self, rng: np.random.Generator) -> bytes:
+        # structured (low-entropy) rows, like real DB records: an 8-byte
+        # unique seed tiled to the row size — unique per write yet compressible
+        seed = rng.bytes(8)
+        reps = max(1, self.cfg.value_bytes // 8)
+        return (seed * reps)[: self.cfg.value_bytes]
+
+    def epoch_txns(
+        self,
+        epoch: int,
+        txns_per_node: int,
+        snapshot: DeltaCRDTStore | None = None,
+    ) -> dict[int, list[Txn]]:
+        """One epoch's transactions for every node: {node: [Txn, ...]}."""
+        cfg = self.cfg
+        out: dict[int, list[Txn]] = {}
+        for node in range(self.n_nodes):
+            txns: list[Txn] = []
+            for _ in range(txns_per_node):
+                keys = self.sampler.sample(self.rng, cfg.ops_per_txn)
+                reads: list[tuple[str, Version]] = []
+                writes: list[tuple[str, bytes]] = []
+                for k in keys:
+                    if self.rng.random() < cfg.read_ratio:
+                        key = f"k{int(k)}"
+                        ver = (
+                            snapshot.version_of(key)
+                            if snapshot is not None
+                            else Version.ZERO
+                        )
+                        reads.append((key, ver))
+                    else:
+                        if (
+                            cfg.hot_write_frac > 0.0
+                            and self.rng.random() < cfg.hot_write_frac
+                        ):
+                            h = int(self.rng.integers(0, cfg.hot_set_size))
+                            if cfg.hot_locality:
+                                key = f"h{int(self.node_region[node])}:{h}"
+                            else:
+                                key = f"k{h}"
+                            cur = snapshot.get(key) if snapshot is not None else None
+                            if (
+                                cfg.rewrite_frac > 0.0
+                                and cur is not None
+                                and self.rng.random() < cfg.rewrite_frac
+                            ):
+                                writes.append((key, cur))
+                            else:
+                                writes.append((key, self._value(self.rng)))
+                            continue
+                        key = f"k{int(k)}"
+                        cur = snapshot.get(key) if snapshot is not None else None
+                        if (
+                            cfg.rewrite_frac > 0.0
+                            and cur is not None
+                            and self.rng.random() < cfg.rewrite_frac
+                        ):
+                            writes.append((key, cur))
+                        else:
+                            writes.append((key, self._value(self.rng)))
+                seq = int(self.rng.integers(0, 1_000_000_000))
+                txns.append(
+                    Txn(
+                        txn_id=self._txn_counter,
+                        node=node,
+                        epoch=epoch,
+                        seq=seq,
+                        read_set=tuple(reads),
+                        write_set=tuple(dict(writes).items()),
+                    )
+                )
+                self._txn_counter += 1
+            out[node] = txns
+        return out
+
+
+# ---------------------------------------------------------------------------
+# TPC-C mixes (paper Sec 6.1)
+# ---------------------------------------------------------------------------
+
+# (NewOrder, Payment, OrderStatus, Delivery, StockLevel)
+TPCC_MIXES: dict[str, tuple[float, float, float, float, float]] = {
+    # write-intensive: NewOrder+Payment > 90%
+    "TPCC-A": (0.55, 0.37, 0.03, 0.03, 0.02),
+    # read-intensive: OrderStatus + StockLevel dominate
+    "TPCC-B": (0.08, 0.08, 0.42, 0.04, 0.38),
+    # balanced: even
+    "TPCC-C": (0.20, 0.20, 0.20, 0.20, 0.20),
+    # real-time: OrderStatus-heavy with moderate writes
+    "TPCC-D": (0.18, 0.14, 0.50, 0.08, 0.10),
+}
+
+_TXN_WRITES = {  # (n_write_keys, n_read_keys, value_bytes)
+    "NewOrder": (10, 3, 120),
+    "Payment": (3, 1, 80),
+    "OrderStatus": (0, 4, 0),
+    "Delivery": (6, 2, 100),
+    "StockLevel": (0, 8, 0),
+}
+_TXN_TYPES = tuple(_TXN_WRITES)
+
+
+@dataclasses.dataclass
+class TPCCConfig:
+    n_warehouses: int = 100
+    mix: str = "TPCC-C"
+    remote_prob: float = 0.10       # cross-warehouse access (NewOrder remote items)
+    items_per_warehouse: int = 200
+
+
+class TPCCGenerator:
+    def __init__(self, cfg: TPCCConfig, n_nodes: int, seed: int = 0):
+        if cfg.mix not in TPCC_MIXES:
+            raise ValueError(f"unknown mix {cfg.mix!r}")
+        self.cfg = cfg
+        self.n_nodes = n_nodes
+        self.rng = np.random.default_rng(seed)
+        self._txn_counter = 0
+        self.neworder_ids: set[int] = set()
+        # warehouses are partitioned across nodes (home warehouses)
+        self.home = np.array_split(np.arange(cfg.n_warehouses), n_nodes)
+
+    def _key(self, warehouse: int, item: int) -> str:
+        return f"w{warehouse}:i{item}"
+
+    def epoch_txns(
+        self,
+        epoch: int,
+        txns_per_node: int,
+        snapshot: DeltaCRDTStore | None = None,
+    ) -> dict[int, list[Txn]]:
+        cfg = self.cfg
+        probs = np.array(TPCC_MIXES[cfg.mix])
+        out: dict[int, list[Txn]] = {}
+        for node in range(self.n_nodes):
+            homes = self.home[node]
+            txns: list[Txn] = []
+            for _ in range(txns_per_node):
+                ttype = _TXN_TYPES[int(self.rng.choice(5, p=probs))]
+                n_w, n_r, vbytes = _TXN_WRITES[ttype]
+                writes: list[tuple[str, bytes]] = []
+                reads: list[tuple[str, Version]] = []
+                for _ in range(n_w):
+                    if self.rng.random() < cfg.remote_prob or len(homes) == 0:
+                        w = int(self.rng.integers(0, cfg.n_warehouses))
+                    else:
+                        w = int(self.rng.choice(homes))
+                    item = int(self.rng.integers(0, cfg.items_per_warehouse))
+                    writes.append((self._key(w, item), self.rng.bytes(vbytes)))
+                for _ in range(n_r):
+                    w = (
+                        int(self.rng.choice(homes))
+                        if len(homes)
+                        else int(self.rng.integers(0, cfg.n_warehouses))
+                    )
+                    item = int(self.rng.integers(0, cfg.items_per_warehouse))
+                    key = self._key(w, item)
+                    ver = (
+                        snapshot.version_of(key)
+                        if snapshot is not None
+                        else Version.ZERO
+                    )
+                    reads.append((key, ver))
+                seq = int(self.rng.integers(0, 1_000_000_000))
+                txns.append(
+                    Txn(
+                        txn_id=self._txn_counter,
+                        node=node,
+                        epoch=epoch,
+                        seq=seq,
+                        read_set=tuple(reads),
+                        write_set=tuple(dict(writes).items()),
+                        )
+                )
+                self._txn_counter += 1
+                # annotate NewOrder txns for tpmC accounting
+                if ttype == "NewOrder":
+                    self.neworder_ids.add(txns[-1].txn_id)
+            out[node] = txns
+        return out

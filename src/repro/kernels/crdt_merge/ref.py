@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the versioned CRDT merge (LWW lattice join).
+
+Row-wise last-writer-wins over two batches of slots:
+
+    winner_i = a if ver_a[i] >= ver_b[i] else b
+    out_val[i]  = winner_i's values
+    out_ver[i]  = max(ver_a[i], ver_b[i])
+
+Ties keep side a (deterministic; the system guarantees equal versions imply
+equal payloads, see repro.core.crdt).  The join is ACI, so the fault-tolerant
+reducer can apply duplicated / reordered delta batches safely.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["crdt_merge_ref"]
+
+
+def crdt_merge_ref(
+    val_a: jnp.ndarray,   # (M, N)
+    ver_a: jnp.ndarray,   # (M,) int32
+    val_b: jnp.ndarray,
+    ver_b: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    take_a = ver_a >= ver_b
+    out_val = jnp.where(take_a[:, None], val_a, val_b)
+    out_ver = jnp.maximum(ver_a, ver_b)
+    return out_val, out_ver

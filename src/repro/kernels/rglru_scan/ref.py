@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence.
+
+    h_t = a_t * h_{t-1} + b_t        (per channel)
+
+Inputs: a, b (B, T, D) with a in (0, 1]; h0 (B, D).
+Returns (h (B, T, D), h_T (B, D)).  Sequential scan in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rglru_scan_ref"]
+
+
+def rglru_scan_ref(
+    a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    h0 = h0.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2))
+    )
+    return hs.transpose(1, 0, 2), h_last

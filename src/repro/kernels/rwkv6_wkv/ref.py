@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence.
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Shapes: r/k/v/w (B, T, H, N); u (H, N); state (B, H, N, N).
+All math in float32 (the recurrence is precision-sensitive: products of
+decays underflow quickly in bf16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref"]
+
+
+def wkv6_ref(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    state: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    r, k, v, w = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw                       # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]    # (B, H, N, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        return wt[..., None] * s + kv, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), final

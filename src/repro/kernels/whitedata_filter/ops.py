@@ -1,0 +1,80 @@
+"""Public jit'd wrapper for the white-data gradient filter.
+
+Handles arbitrary pytrees / shapes by flattening to padded 2-D tiles, calls
+the Pallas kernel (interpret mode on CPU, compiled on TPU), and exposes the
+high-level ``filter_gradient`` used by the geococo sync strategy.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .ref import whitedata_filter_ref
+from .whitedata_filter import DEFAULT_BLOCK, whitedata_filter_pallas
+
+__all__ = ["whitedata_filter", "filter_gradient", "whitedata_filter_ref"]
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def whitedata_filter(
+    g: jnp.ndarray,
+    r: jnp.ndarray,
+    tau,
+    *,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Filter one array (any shape).  Returns (send, new_r, kept)."""
+    if not use_kernel:
+        return whitedata_filter_ref(g, r, tau)
+    interpret = (not _ON_TPU) if interpret is None else interpret
+    shape = g.shape
+    size = g.size
+    bm, bn = DEFAULT_BLOCK
+    if size % bn:
+        # pad the flat vector up to a tile multiple
+        pad = bn - size % bn
+        gf = jnp.concatenate([g.reshape(-1), jnp.zeros(pad, g.dtype)])
+        rf = jnp.concatenate([r.reshape(-1), jnp.zeros(pad, r.dtype)])
+    else:
+        pad = 0
+        gf, rf = g.reshape(-1), r.reshape(-1)
+    rows = gf.size // bn
+    bm_eff = math.gcd(rows, bm) if rows % bm else bm
+    send, new_r, kept = whitedata_filter_pallas(
+        gf.reshape(rows, bn), rf.reshape(rows, bn), tau,
+        block=(bm_eff, bn), interpret=interpret,
+    )
+    send = send.reshape(-1)[:size].reshape(shape)
+    new_r = new_r.reshape(-1)[:size].reshape(shape)
+    return send, new_r, kept
+
+
+def filter_gradient(grads, residuals, tau, *, use_kernel: bool = True):
+    """Apply the filter across a gradient pytree.
+
+    Returns (send_tree, new_residual_tree, stats) with
+    stats = {"kept": int32, "total": int32, "density": f32}.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = treedef.flatten_up_to(residuals)
+    sends, new_rs, kepts = [], [], []
+    total = 0
+    for g, r in zip(leaves, r_leaves):
+        s, nr, k = whitedata_filter(g, r, tau, use_kernel=use_kernel)
+        sends.append(s)
+        new_rs.append(nr)
+        kepts.append(k)
+        total += g.size
+    kept = sum(kepts)
+    stats = {
+        "kept": kept,
+        "total": jnp.asarray(total, jnp.int32),
+        "density": kept.astype(jnp.float32) / total,
+    }
+    return treedef.unflatten(sends), treedef.unflatten(new_rs), stats

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused error-feedback white-data filter.
+
+Semantics (per element, over a gradient block g and residual r):
+
+    acc   = g + r                       (error-feedback accumulation)
+    keep  = |acc| >= tau                (white-data test)
+    send  = keep ? acc : 0              (crosses the slow link)
+    r'    = keep ? 0   : acc            (stays local, re-accumulates)
+    kept  = sum(keep)                   (per-block statistics)
+
+This is the gradient-plane analogue of the paper's task-preserving filter:
+``send + r' == g + r`` always (nothing is lost, only deferred), mirroring
+the database filter's losslessness.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["whitedata_filter_ref"]
+
+
+def whitedata_filter_ref(
+    g: jnp.ndarray, r: jnp.ndarray, tau: jnp.ndarray | float
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (send, new_residual, kept_count:int32 scalar)."""
+    acc = g.astype(jnp.float32) + r.astype(jnp.float32)
+    keep = jnp.abs(acc) >= jnp.asarray(tau, jnp.float32)
+    send = jnp.where(keep, acc, 0.0).astype(g.dtype)
+    new_r = jnp.where(keep, 0.0, acc).astype(r.dtype)
+    kept = keep.sum(dtype=jnp.int32)
+    return send, new_r, kept

@@ -1,0 +1,157 @@
+"""Roofline analysis over dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    PYTHONPATH=src python -m repro.launch.roofline --dryrun results/dryrun
+
+Per (arch x shape x mesh) cell, derives the three roofline terms from the
+trip-count-aware HLO cost model recorded by the dry-run:
+
+    t_compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16 / chip)
+    t_memory     = HLO_bytes / HBM_bw                (819 GB/s / chip)
+    t_collective = sum_axis link_bytes_axis / link_bw
+
+Intra-pod axes (`data`, `model`) use the 50 GB/s ICI link figure; the `pod`
+axis is the DCN boundary and is *also* reported at a clearly-labeled
+25 GB/s/host supplementary estimate (DESIGN.md §8).  All HLO quantities are
+per device, so no chip-count division is needed.
+
+Also reports MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill) /
+2*N_active*B (decode) and the useful-compute ratio, plus the dominant term
+and a one-line "what would move it" note.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s
+ICI_BW = 50e9              # B/s per link (intra-pod: data, model axes)
+DCN_BW = 25e9              # B/s per host (inter-pod `pod` axis, supplementary)
+
+__all__ = ["roofline_terms", "model_flops", "build_table", "main"]
+
+
+def model_flops(arch: str, shape_name: str, mesh_shape: dict) -> float:
+    """Analytic useful FLOPs per device per step."""
+    from ..configs.base import SHAPES
+    from ..configs.registry import get_config
+    from ..models.model import active_param_count
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = active_param_count(cfg)
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def roofline_terms(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    by_axes = rec["collective_link_bytes_by_axes"]
+    t_compute = hlo["flops"] / PEAK_FLOPS
+    t_memory = hlo["bytes"] / HBM_BW
+    ici_bytes = sum(v for k, v in by_axes.items() if k not in ("pod", "replica"))
+    dcn_bytes = by_axes.get("pod", 0.0)
+    t_coll_ici = ici_bytes / ICI_BW
+    t_coll_dcn_at_ici = dcn_bytes / ICI_BW     # spec convention: one link figure
+    t_coll = t_coll_ici + t_coll_dcn_at_ici
+    t_coll_dcn_supp = dcn_bytes / DCN_BW       # supplementary DCN estimate
+    terms = {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "t_collective_ici_s": t_coll_ici,
+        "t_collective_pod_s": t_coll_dcn_at_ici,
+        "t_collective_pod_dcn25_s": t_coll_dcn_supp,
+    }
+    dom = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    terms["dominant"] = dom
+    bound = max(t_compute, t_memory, t_coll)
+    terms["roofline_step_s"] = bound
+    terms["compute_fraction_of_bound"] = t_compute / bound if bound else 0.0
+    mf = model_flops(rec["arch"], rec["shape"], rec["mesh_shape"])
+    terms["model_flops"] = mf
+    terms["useful_ratio"] = mf / hlo["flops"] if hlo["flops"] else 0.0
+    # MFU at the roofline bound (what perfect overlap would achieve)
+    terms["roofline_mfu"] = mf / (bound * PEAK_FLOPS) if bound else 0.0
+    return terms
+
+
+_NOTES = {
+    "compute": "compute-bound: raise MXU utilization (tiling/fusion) or shrink redundant recompute (remat policy)",
+    "memory": "HBM-bound: fuse elementwise chains, cut activation precision, reduce remat re-reads",
+    "collective": "collective-bound: reshard to shrink the dominant axis traffic (TP block size, FSDP prefetch overlap, filtered/compact exchange)",
+}
+
+
+def build_table(dryrun_dir: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            rows.append({
+                "arch": rec.get("arch"), "shape": rec.get("shape"),
+                "mesh": rec.get("mesh"), "strategy": rec.get("strategy"),
+                "status": "fail", "error": rec.get("error", "")[:200],
+            })
+            continue
+        terms = roofline_terms(rec)
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "strategy": rec["strategy"], "status": "ok",
+            "peak_gb": rec["memory"]["peak_gb"],
+            **{k: v for k, v in terms.items()},
+            "note": _NOTES[terms["dominant"]],
+        })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--mesh", default="single",
+                    help="mesh for the main table (spec: single-pod)")
+    args = ap.parse_args()
+    rows = build_table(args.dryrun)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    sel = [r for r in rows if r.get("mesh") == args.mesh and r["status"] == "ok"]
+    hdr = (f"{'arch':24s} {'shape':12s} {'strat':8s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'dom':>6s} {'MFU@roof':>8s} "
+           f"{'useful':>7s} {'peakGB':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sel:
+        print(
+            f"{r['arch']:24s} {r['shape']:12s} {r['strategy']:8s} "
+            f"{r['t_compute_s']:9.3f} {r['t_memory_s']:9.3f} "
+            f"{r['t_collective_s']:9.3f} {r['dominant'][:6]:>6s} "
+            f"{r['roofline_mfu']:8.1%} {r['useful_ratio']:7.2f} "
+            f"{r['peak_gb']:7.1f}"
+        )
+    fails = [r for r in rows if r["status"] != "ok"]
+    if fails:
+        print(f"\n{len(fails)} failed cells:")
+        for r in fails:
+            print(f"  {r['arch']} {r['shape']} {r['mesh']}: {r['error'][:120]}")
+    print(f"\nfull table -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

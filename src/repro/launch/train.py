@@ -1,0 +1,82 @@
+"""Training entry point.
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.train --arch minitron-8b --smoke \
+        --mesh 2,2,2 --sync geococo --steps 100
+
+On real hardware the same entry point runs the full configs; on this CPU
+container use --smoke (reduced config) with a forced device count.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mesh", default="2,2,2",
+                    help="pod,data,model sizes (product = device count)")
+    ap.add_argument("--sync", default="hier",
+                    choices=["flat", "hier", "geococo"])
+    ap.add_argument("--density", type=float, default=0.10)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import os
+
+    shape = tuple(int(x) for x in args.mesh.split(","))
+    n_dev = 1
+    for s in shape:
+        n_dev *= s
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}"
+    )
+
+    import jax
+
+    from ..configs.registry import get_config, get_smoke_config
+    from ..data.pipeline import DataConfig
+    from ..dist.collectives import SyncConfig
+    from ..launch.mesh import make_small_mesh
+    from ..optim.adamw import AdamWConfig
+    from ..train.train_step import TrainConfig
+    from ..train.trainer import Trainer, TrainerConfig
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    axes = ("pod", "data", "model")[-len(shape):]
+    mesh = make_small_mesh(shape, axes)
+    tcfg = TrainConfig(
+        sync=SyncConfig(strategy=args.sync, density=args.density,
+                        chunk=2048, min_leaf_size=4096),
+        optim=AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 5)),
+    )
+    run_cfg = TrainerConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+    )
+    data_cfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed,
+    )
+    trainer = Trainer(cfg, mesh, tcfg, run_cfg, data_cfg)
+    if trainer.maybe_resume():
+        print(f"resumed from step {trainer.step_idx}")
+    hist = trainer.run()
+    print(
+        f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+        f"over {len(hist)} steps"
+    )
+
+
+if __name__ == "__main__":
+    main()

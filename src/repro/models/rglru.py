@@ -1,0 +1,122 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)                  (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                  (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))     (data-dependent decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Implemented with ``jax.lax.associative_scan`` over (a, b) pairs — O(log T)
+depth, O(T*D) memory.  The surrounding Griffin recurrent block is:
+
+    x -> [ gelu(W_gate x) ]  *  [ RG-LRU(conv1d_4(W_in x)) ]  -> W_out
+
+Decode is O(1): carry (h, conv window).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_apply, dense_init
+
+__all__ = ["rglru_block_init", "rglru_block_apply", "rglru_init_state"]
+
+_C = 8.0
+
+
+def rglru_block_init(
+    key, d_model: int, lru_width: int, conv_width: int = 4, dtype=jnp.float32
+) -> Params:
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(Lambda) in ~[0.9, 0.999]
+    lam = jax.random.uniform(ks[0], (lru_width,), jnp.float32, 2.0, 7.0)
+    return {
+        "w_in": dense_init(ks[1], d_model, lru_width, dtype=dtype),
+        "w_gate": dense_init(ks[2], d_model, lru_width, dtype=dtype),
+        "conv_w": jax.random.normal(ks[3], (conv_width, lru_width), dtype) * 0.1,
+        "conv_b": jnp.zeros((lru_width,), dtype),
+        "wa": dense_init(ks[4], lru_width, lru_width, bias=True, dtype=dtype),
+        "wx": dense_init(ks[5], lru_width, lru_width, bias=True, dtype=dtype),
+        "lam": lam.astype(dtype),
+        "w_out": dense_init(ks[6], lru_width, d_model,
+                            scale=0.02 / math.sqrt(2), dtype=dtype),
+    }
+
+
+def _causal_conv1d(
+    w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray, prev: jnp.ndarray | None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv, width W.  prev: (B, W-1, D) history or None."""
+    width = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width)
+    ) + b.astype(x.dtype)
+    new_prev = xp[:, -(width - 1):] if width > 1 else prev
+    return out, new_prev
+
+
+def _rglru_scan(a: jnp.ndarray, bterm: jnp.ndarray, h0: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t*h_{t-1} + b_t via associative scan; returns (h_1..T, h_T)."""
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    # fold h0 into the first b term
+    b0 = bterm.at[:, 0].add(a[:, 0] * h0)
+    aa, bb = jax.lax.associative_scan(combine, (a, b0), axis=1)
+    return bb, bb[:, -1]
+
+
+def rglru_block_apply(
+    p: Params,
+    x: jnp.ndarray,                  # (B, T, d_model)
+    *,
+    state: Params | None = None,     # {"h": (B, D), "conv": (B, W-1, D)}
+) -> tuple[jnp.ndarray, Params | None]:
+    gate = jax.nn.gelu(dense_apply(p["w_gate"], x))
+    u = dense_apply(p["w_in"], x)
+    u, conv_state = _causal_conv1d(
+        p["conv_w"], p["conv_b"],
+        u, state["conv"] if state is not None else None,
+    )
+
+    r = jax.nn.sigmoid(dense_apply(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["wx"], u).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # < 0
+    log_a = _C * r * log_a_base[None, None]
+    a = jnp.exp(log_a)
+    bterm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(jnp.float32)
+    )
+    h0 = (
+        state["h"].astype(jnp.float32)
+        if state is not None
+        else jnp.zeros_like(bterm[:, 0])
+    )
+    h, h_last = _rglru_scan(a, bterm, h0)
+    h = h.astype(x.dtype)
+
+    out = dense_apply(p["w_out"], h * gate)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last.astype(state["h"].dtype), "conv": conv_state}
+    return out, new_state
+
+
+def rglru_init_state(
+    b: int, lru_width: int, conv_width: int = 4, dtype=jnp.float32
+) -> Params:
+    return {
+        "h": jnp.zeros((b, lru_width), jnp.float32),
+        "conv": jnp.zeros((b, conv_width - 1, lru_width), dtype),
+    }

@@ -1,0 +1,279 @@
+"""RWKV-6 "Finch" time-mix and channel-mix (arXiv:2404.05892).
+
+Time-mix per head (head dim N, state S in R^{NxN}):
+
+    y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with data-dependent decay ``w_t = exp(-exp(wb + lora_w(x)))`` and
+data-dependent token-shift interpolation (the Finch additions over v5).
+The jnp scan here is the oracle for the Pallas WKV6 kernel
+(``repro.kernels.rwkv6_wkv``); the model calls the kernel's jnp reference
+path so CPU tests and TPU runs share semantics.
+
+Decode is O(1): the state (B, H, N, N) plus one token-shift vector.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_apply, dense_init
+
+__all__ = [
+    "rwkv_tmix_init",
+    "rwkv_tmix_apply",
+    "rwkv_cmix_init",
+    "rwkv_cmix_apply",
+    "rwkv_init_state",
+    "wkv6_scan",
+]
+
+
+def _lora_init(key, d: int, r: int, out: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": jax.random.normal(k1, (d, r), dtype) * 0.01,
+        "b": jax.random.normal(k2, (r, out), dtype) * 0.01,
+    }
+
+
+def _lora_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.tanh(x @ p["a"].astype(x.dtype)) @ p["b"].astype(x.dtype)
+
+
+def rwkv_tmix_init(key, d_model: int, head_dim: int, dtype=jnp.float32) -> Params:
+    n_heads = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    p = {
+        "mu": jnp.full((5, d_model), 0.5, dtype),          # token-shift bases (r,k,v,w,g)
+        "mu_lora": _lora_init(ks[0], d_model, 32, 5 * d_model, dtype),
+        "wr": dense_init(ks[1], d_model, d_model, dtype=dtype),
+        "wk": dense_init(ks[2], d_model, d_model, dtype=dtype),
+        "wv": dense_init(ks[3], d_model, d_model, dtype=dtype),
+        "wg": dense_init(ks[4], d_model, d_model, dtype=dtype),
+        "wo": dense_init(ks[5], d_model, d_model,
+                         scale=0.02 / math.sqrt(2), dtype=dtype),
+        "w_base": jnp.zeros((d_model,), dtype) - 6.0,       # slow decay at init
+        "w_lora": _lora_init(ks[6], d_model, 64, d_model, dtype),
+        "u": jax.random.normal(ks[7], (d_model,), dtype) * 0.1,
+        "ln_g": jnp.ones((d_model,), dtype),                # per-head group norm gain
+        "ln_b": jnp.zeros((d_model,), dtype),
+    }
+    return p
+
+
+def wkv6_scan(
+    r: jnp.ndarray,   # (B, T, H, N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,   # decay in (0, 1), (B, T, H, N)
+    u: jnp.ndarray,   # (H, N)
+    state: jnp.ndarray,  # (B, H, N, N)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential WKV6 recurrence (jnp oracle).  Returns (y, final_state)."""
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw            # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B, H, N, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, y
+
+    xs = (
+        r.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        w.transpose(1, 0, 2, 3),
+    )
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), final  # (B, T, H, N)
+
+
+def wkv6_chunked(
+    r: jnp.ndarray,   # (B, T, H, N)
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,   # decay in (0, 1)
+    u: jnp.ndarray,   # (H, N)
+    state: jnp.ndarray,  # (B, H, N, N)
+    *,
+    chunk: int = 128,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked-parallel WKV6 (exact, MXU-friendly).
+
+    The per-step recurrence updates the (N, N) state T times; on the roofline
+    that is O(T) sequential state round-trips.  Chunking rewrites it as, per
+    chunk of C steps (cumulative log-decays ``L_t = sum_{s<=t} log w_s``):
+
+        y_t  = r_t (P_{t-1} * S_0)  +  sum_{s<t} (r_t * P_{t-1}/P_s) k_s v_s^T
+               + (r_t * u) k_t v_t^T
+        S_C  = P_C * S_0 + sum_s (P_C / P_s) k_s v_s^T
+
+    where P_t = exp(L_t).  The intra-chunk term is a causal (C x C)
+    attention-style matmul; the state is touched once per chunk — state
+    traffic drops T/C-fold and the compute moves onto the MXU.  Ratios
+    P_{t-1}/P_s (s < t) are products of w in (0,1): always <= 1, numerically
+    safe in log space.  This mirrors the Pallas kernel's time-chunked design
+    (EXPERIMENTS.md §Perf, rwkv6 iteration).
+    """
+    b, t, h, n = r.shape
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+    f32 = jnp.float32
+    r, k, v = (a.astype(f32) for a in (r, k, v))
+    logw = jnp.log(jnp.clip(w.astype(f32), 1e-12, 1.0))
+
+    rs = r.reshape(b, nc, c, h, n)
+    ks = k.reshape(b, nc, c, h, n)
+    vs = v.reshape(b, nc, c, h, n)
+    lws = logw.reshape(b, nc, c, h, n)
+    u = u.astype(f32)
+
+    def chunk_step(s0, args):
+        rc, kc, vc, lw = args                      # (B, C, H, N)
+        lcum = jnp.cumsum(lw, axis=1)              # L_t inclusive
+        p_incl = jnp.exp(lcum)                     # P_t
+        p_excl = jnp.exp(lcum - lw)                # P_{t-1}
+        # cross-chunk: y_t += (r_t * P_{t-1}) . S_0
+        rq = rc * p_excl
+        y = jnp.einsum("bchn,bhnm->bchm", rq, s0)
+        # intra-chunk: scores[t,s] = sum_n r_t[n] P_{t-1}[n]/P_s[n] k_s[n]
+        kd = kc * jnp.exp(-lcum)                   # k_s / P_s
+        scores = jnp.einsum("bchn,bshn->bhcs", rq, kd)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        # bonus diagonal: (r_t * u) . k_t v_t^T
+        diag = jnp.einsum("bchn,bchn->bch", rc * u[None, None], kc)
+        y = y + jnp.einsum("bhcs,bshm->bchm", scores, vc)
+        y = y + diag[..., None] * vc
+        # state update: S_C = P_C * S_0 + sum_s (P_C / P_s) k_s v_s^T
+        p_c = p_incl[:, -1]                        # (B, H, N)
+        kscaled = kd * p_c[:, None]                # (P_C / P_s) k_s
+        s_new = p_c[..., None] * s0 + jnp.einsum("bshn,bshm->bhnm", kscaled, vc)
+        return s_new, y
+
+    xs = (
+        rs.transpose(1, 0, 2, 3, 4),
+        ks.transpose(1, 0, 2, 3, 4),
+        vs.transpose(1, 0, 2, 3, 4),
+        lws.transpose(1, 0, 2, 3, 4),
+    )
+    s_fin, ys = jax.lax.scan(chunk_step, state.astype(f32), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, t, h, n)
+    return y, s_fin
+
+
+def rwkv_tmix_apply(
+    p: Params,
+    x: jnp.ndarray,                 # (B, T, d)
+    *,
+    head_dim: int,
+    state: Params | None = None,    # {"s": (B,H,N,N), "shift": (B,d)}
+    norm_eps: float = 1e-5,
+    use_kernel: bool = False,
+    chunked: bool = True,
+) -> tuple[jnp.ndarray, Params | None]:
+    b, t, d = x.shape
+    h = d // head_dim
+
+    x_prev = jnp.concatenate(
+        [
+            (state["shift"][:, None] if state is not None else jnp.zeros_like(x[:, :1])),
+            x[:, :-1],
+        ],
+        axis=1,
+    )
+    lora = _lora_apply(p["mu_lora"], x).reshape(b, t, 5, d)
+    mu = p["mu"].astype(x.dtype)[None, None] + lora            # (B, T, 5, d)
+    xs = x[:, :, None] + (x_prev - x)[:, :, None] * mu
+    xr, xk, xv, xw, xg = (xs[:, :, i] for i in range(5))
+
+    r = dense_apply(p["wr"], xr).reshape(b, t, h, head_dim)
+    k = dense_apply(p["wk"], xk).reshape(b, t, h, head_dim)
+    v = dense_apply(p["wv"], xv).reshape(b, t, h, head_dim)
+    g = jax.nn.silu(dense_apply(p["wg"], xg))
+    w_log = p["w_base"].astype(jnp.float32) + _lora_apply(p["w_lora"], xw).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, t, h, head_dim).astype(x.dtype)
+    u = p["u"].astype(x.dtype).reshape(h, head_dim)
+
+    s0 = (
+        state["s"]
+        if state is not None
+        else jnp.zeros((b, h, head_dim, head_dim), jnp.float32)
+    )
+    if use_kernel:
+        from ..kernels.rwkv6_wkv import ops as wkv_ops
+
+        y, s_fin = wkv_ops.wkv6(r, k, v, w, u, s0)
+    elif chunked and t > 1:
+        y, s_fin = wkv6_chunked(r, k, v, w, u.astype(jnp.float32), s0)
+    else:
+        y, s_fin = wkv6_scan(
+            r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), w.astype(jnp.float32),
+            u.astype(jnp.float32), s0,
+        )
+    y = y.astype(x.dtype).reshape(b, t, d)
+
+    # per-head group norm
+    yh = y.reshape(b, t, h, head_dim).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + norm_eps)
+    y = (yh.reshape(b, t, d) * p["ln_g"].astype(jnp.float32)
+         + p["ln_b"].astype(jnp.float32)).astype(x.dtype)
+
+    out = dense_apply(p["wo"], y * g)
+    new_state = None
+    if state is not None:
+        new_state = {"s": s_fin, "shift": x[:, -1]}
+    return out, new_state
+
+
+def rwkv_cmix_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d_model,), 0.5, dtype),
+        "mu_r": jnp.full((d_model,), 0.5, dtype),
+        "wk": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "wv": dense_init(k2, d_ff, d_model, scale=0.02 / math.sqrt(2), dtype=dtype),
+        "wr": dense_init(k3, d_model, d_model, dtype=dtype),
+    }
+
+
+def rwkv_cmix_apply(
+    p: Params,
+    x: jnp.ndarray,
+    *,
+    state: Params | None = None,      # {"shift": (B, d)}
+) -> tuple[jnp.ndarray, Params | None]:
+    x_prev = jnp.concatenate(
+        [
+            (state["shift"][:, None] if state is not None else jnp.zeros_like(x[:, :1])),
+            x[:, :-1],
+        ],
+        axis=1,
+    )
+    xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (x_prev - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense_apply(p["wk"], xk)))
+    out = jax.nn.sigmoid(dense_apply(p["wr"], xr)) * dense_apply(p["wv"], k)
+    new_state = {"shift": x[:, -1]} if state is not None else None
+    return out, new_state
+
+
+def rwkv_init_state(b: int, d_model: int, head_dim: int, dtype=jnp.float32) -> Params:
+    h = d_model // head_dim
+    return {
+        "tmix": {
+            "s": jnp.zeros((b, h, head_dim, head_dim), jnp.float32),
+            "shift": jnp.zeros((b, d_model), dtype),
+        },
+        "cmix": {"shift": jnp.zeros((b, d_model), dtype)},
+    }

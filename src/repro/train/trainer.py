@@ -1,0 +1,211 @@
+"""Fault-tolerant training loop.
+
+Composes the jitted train step with:
+
+* periodic + async checkpointing (restart-safe, elastic restore),
+* **straggler mitigation**: per-step wall-times feed the same damped
+  Replanner machinery the database plane uses; sustained degradation of the
+  inter-pod link triggers a sync-strategy replan (e.g. new relay ring order
+  or a density drop for the geococo filter) — the training-plane analogue of
+  the paper's "Re-group damping strategy",
+* **failure handling**: a step that raises (device loss) rolls back to the
+  last checkpoint; duplicate replays are harmless because the optimizer
+  state is versioned by ``step`` (applying the same step twice from the same
+  checkpoint is deterministic and idempotent at the state level).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import checkpoint as _ckpt_pkg  # noqa: F401  (namespace)
+from ..checkpoint.checkpoint import latest_step, restore, save, save_async
+from ..configs.base import ModelConfig
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..dist.collectives import SyncConfig
+from ..models.model import init_params
+from ..optim.adamw import adamw_init
+from .train_step import TrainConfig, build_train_step
+
+__all__ = ["TrainerConfig", "Trainer", "StragglerMonitor"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    log_every: int = 10
+    seed: int = 0
+    straggler_threshold: float = 1.5   # step time vs EWMA
+    straggler_sustain: int = 3
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker with sustained-deviation detection —
+    the same damping policy as the WAN replanner (Sec 4.2)."""
+
+    def __init__(self, threshold: float = 1.5, sustain: int = 3, alpha: float = 0.2):
+        self.threshold = threshold
+        self.sustain = sustain
+        self.alpha = alpha
+        self.ewma: float | None = None
+        self._over = 0
+        self.trips = 0
+
+    def observe(self, dt: float) -> bool:
+        """Feed one step time; returns True when mitigation should trigger."""
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        trigger = False
+        if dt > self.threshold * self.ewma:
+            self._over += 1
+            if self._over >= self.sustain:
+                trigger = True
+                self.trips += 1
+                self._over = 0
+        else:
+            self._over = 0
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return trigger
+
+
+class Trainer:
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        mesh,
+        tcfg: TrainConfig,
+        run_cfg: TrainerConfig,
+        data_cfg: DataConfig | None = None,
+        *,
+        on_straggler: Callable[["Trainer"], None] | None = None,
+    ):
+        self.model_cfg = model_cfg
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.run_cfg = run_cfg
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=model_cfg.vocab_size, seq_len=128, global_batch=8,
+            seed=run_cfg.seed,
+        )
+        self.data = SyntheticLM(self.data_cfg)
+        self.make_jit, self.shardings = build_train_step(model_cfg, mesh, tcfg)
+        self.monitor = StragglerMonitor(
+            run_cfg.straggler_threshold, run_cfg.straggler_sustain
+        )
+        self.on_straggler = on_straggler
+        self._pending_save = None
+        self.history: list[dict[str, float]] = []
+
+        self.params = init_params(model_cfg, jax.random.PRNGKey(run_cfg.seed))
+        self.params = jax.tree.map(
+            lambda p: p.astype(tcfg.param_dtype), self.params
+        )
+        self.opt_state = adamw_init(self.params, tcfg.optim)
+        self.residuals = (
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), self.params)
+            if tcfg.sync.strategy == "geococo"
+            else None
+        )
+        self.step_idx = 0
+        self._step_fn = None
+
+    # -- checkpoint plumbing ---------------------------------------------------
+
+    def _state(self):
+        st = {"params": self.params, "opt": self.opt_state, "step": self.step_idx}
+        if self.residuals is not None:
+            st["residuals"] = self.residuals
+        return st
+
+    def save_ckpt(self):
+        if self.run_cfg.ckpt_dir is None:
+            return
+        if self._pending_save is not None:
+            self._pending_save.join()
+        st = self._state()
+        if self.run_cfg.ckpt_async:
+            self._pending_save = save_async(self.run_cfg.ckpt_dir, self.step_idx, st)
+        else:
+            save(self.run_cfg.ckpt_dir, self.step_idx, st)
+
+    def maybe_resume(self) -> bool:
+        if self.run_cfg.ckpt_dir is None:
+            return False
+        last = latest_step(self.run_cfg.ckpt_dir)
+        if last is None:
+            return False
+        like = self._state()
+        st = restore(self.run_cfg.ckpt_dir, last, like)
+        self.params = st["params"]
+        self.opt_state = st["opt"]
+        self.residuals = st.get("residuals", self.residuals)
+        self.step_idx = int(st["step"])
+        return True
+
+    # -- main loop ---------------------------------------------------------------
+
+    def _build(self, batch):
+        if self._step_fn is None:
+            self._step_fn = self.make_jit(batch)
+        return self._step_fn
+
+    def run(self, *, fault_injector: Callable[[int], None] | None = None):
+        cfg = self.run_cfg
+        start = self.step_idx
+        while self.step_idx < cfg.steps:
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self.data.batch(self.step_idx).items()
+            }
+            step = self._build(batch)
+            t0 = time.perf_counter()
+            try:
+                if fault_injector is not None:
+                    fault_injector(self.step_idx)
+                out = step(self.params, self.opt_state, self.residuals, batch)
+                self.params, self.opt_state, self.residuals, metrics = out
+                jax.block_until_ready(metrics["loss"])
+            except _RECOVERABLE as e:  # device failure: roll back + replay
+                resumed = self.maybe_resume()
+                if not resumed:
+                    raise
+                self._step_fn = None  # rebuild on (possibly new) topology
+                continue
+            dt = time.perf_counter() - t0
+            self.step_idx += 1
+            rec = {
+                "step": self.step_idx,
+                "loss": float(metrics["loss"]),
+                "grad_norm": float(metrics["grad_norm"]),
+                "dt": dt,
+            }
+            self.history.append(rec)
+            if self.monitor.observe(dt) and self.on_straggler is not None:
+                self.on_straggler(self)
+            if cfg.ckpt_dir and self.step_idx % cfg.ckpt_every == 0:
+                self.save_ckpt()
+            if self.step_idx % cfg.log_every == 0 or self.step_idx == cfg.steps:
+                print(
+                    f"step {rec['step']:5d}  loss {rec['loss']:.4f}  "
+                    f"gnorm {rec['grad_norm']:.3f}  {dt*1e3:.0f} ms"
+                )
+        if self._pending_save is not None:
+            self._pending_save.join()
+        return self.history
+
+
+class FaultInjected(RuntimeError):
+    """Raised by test fault injectors to simulate a device failure."""
+
+
+_RECOVERABLE = (FaultInjected,)

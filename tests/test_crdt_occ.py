@@ -1,0 +1,114 @@
+import numpy as np
+import pytest
+
+from repro.core.crdt import DeltaCRDTStore, Update, Version, merge_updates
+from repro.core.occ import Txn, committed_updates, txn_updates, validate_epoch
+
+
+def _u(key, val, epoch, seq, node=0, txn=0):
+    return Update(key, val, Version(epoch, seq, node), txn)
+
+
+def test_version_total_order():
+    assert Version(0, 1, 2) < Version(0, 1, 3) < Version(0, 2, 0) < Version(1, 0, 0)
+    assert Version.ZERO < Version(0, 0, 0)
+
+
+def test_store_apply_lww():
+    s = DeltaCRDTStore()
+    assert s.apply(_u("a", b"1", 0, 0))
+    assert not s.apply(_u("a", b"0", 0, 0))       # same version: no-op
+    assert not s.apply(_u("a", b"older", -1, 5))  # older epoch loses
+    assert s.apply(_u("a", b"2", 0, 1))
+    assert s.get("a") == b"2"
+
+
+def test_store_idempotent_and_order_free():
+    ups = [_u("a", b"1", 0, 0), _u("a", b"2", 0, 5), _u("b", b"x", 0, 1)]
+    s1 = DeltaCRDTStore()
+    s1.apply_many(ups)
+    s2 = DeltaCRDTStore()
+    s2.apply_many(list(reversed(ups)) + ups + ups)  # reorder + duplicates
+    assert s1.full_state() == s2.full_state()
+    assert s1.digest() == s2.digest()
+
+
+def test_meta_only_is_wire_form_only():
+    u = _u("a", b"payload", 1, 0)
+    mu = u.meta_only()
+    assert mu.value == b""
+    assert mu.version == u.version and mu.key == u.key
+    assert mu.nbytes < u.nbytes  # the point: fewer bytes on the wire
+
+
+def test_merge_updates_invariance():
+    ups = [_u("k", b"1", 0, 3), _u("k", b"2", 0, 1), _u("j", b"3", 0, 2)]
+    m1 = merge_updates(ups)
+    m2 = merge_updates(ups * 3)
+    m3 = merge_updates(list(reversed(ups)))
+    assert m1 == m2 == m3
+    assert m1["k"].value == b"1"  # max version (seq 3) wins
+
+
+def _txn(tid, node, seq, writes, reads=(), epoch=0):
+    return Txn(
+        txn_id=tid,
+        node=node,
+        epoch=epoch,
+        seq=seq,
+        read_set=tuple(reads),
+        write_set=tuple(writes),
+    )
+
+
+def test_validate_first_writer_wins():
+    t1 = _txn(1, 0, 10, [("k", b"a")])
+    t2 = _txn(2, 1, 20, [("k", b"b")])
+    committed, aborted = validate_epoch([t1, t2])
+    assert committed == {1} and aborted == {2}
+
+
+def test_validate_no_reinstatement():
+    # t1 wins "x" but loses "y" to t0 -> t1 aborts.
+    # t2 also wrote "x" later than t1; t2 still aborts (no reinstatement).
+    t0 = _txn(0, 0, 1, [("y", b"0")])
+    t1 = _txn(1, 1, 2, [("x", b"1"), ("y", b"1")])
+    t2 = _txn(2, 2, 3, [("x", b"2")])
+    committed, aborted = validate_epoch([t0, t1, t2])
+    assert committed == {0}
+    assert aborted == {1, 2}
+
+
+def test_validate_monotone_under_subset():
+    """A transaction aborted in any subset stays aborted in the full set."""
+    rng = np.random.default_rng(0)
+    txns = []
+    for tid in range(30):
+        keys = rng.choice(8, size=2, replace=False)
+        txns.append(
+            _txn(tid, int(rng.integers(3)), int(rng.integers(1000)),
+                 [(f"k{k}", bytes([tid])) for k in keys])
+        )
+    _, aborted_full = validate_epoch(txns)
+    subset = txns[:15]
+    _, aborted_sub = validate_epoch(subset)
+    assert aborted_sub <= aborted_full
+
+
+def test_read_validation_stale_read():
+    snap = DeltaCRDTStore()
+    snap.apply(_u("k", b"v", 0, 5))
+    ok = _txn(1, 0, 1, [("w", b"x")], reads=[("k", Version(0, 5, 0))], epoch=1)
+    stale = _txn(2, 0, 2, [("w2", b"y")], reads=[("k", Version(0, 1, 0))], epoch=1)
+    committed, aborted = validate_epoch([ok, stale], snap)
+    assert 1 in committed and 2 in aborted
+
+
+def test_committed_updates_apply_cleanly():
+    t1 = _txn(1, 0, 1, [("a", b"1"), ("b", b"2")])
+    t2 = _txn(2, 1, 2, [("a", b"3")])  # loses "a"
+    ups, aborted = committed_updates([t1, t2])
+    assert aborted == {2}
+    s = DeltaCRDTStore()
+    s.apply_many(ups)
+    assert s.get("a") == b"1" and s.get("b") == b"2"

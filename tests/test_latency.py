@@ -1,0 +1,132 @@
+import numpy as np
+import pytest
+
+from repro.core.latency import (
+    GeoClusterSpec,
+    all_pairs_shortest,
+    aws_latency_matrix,
+    bandwidth_matrix,
+    geo_clustered_matrix,
+    jitter_trace,
+    one_relay_effective,
+    tiv_fraction,
+    tiv_pairs,
+    validate_latency_matrix,
+)
+
+
+def test_aws_matrix_valid():
+    lat = aws_latency_matrix()
+    validate_latency_matrix(lat)
+    assert lat.shape == (10, 10)
+    assert np.allclose(lat, lat.T)
+    # paper-quoted pairs
+    assert lat[5, 6] == pytest.approx(26.0)      # Stockholm-Frankfurt
+    assert lat[3, 7] == pytest.approx(337.0)     # Sao Paulo-Cape Town
+    assert lat[1, 2] == pytest.approx(81.1)      # N.California-Central Canada
+    assert lat[1, 7] == pytest.approx(288.5)     # N.California-Cape Town
+
+
+def test_geo_clustered_structure():
+    rng = np.random.default_rng(0)
+    spec = GeoClusterSpec(n_nodes=12, n_clusters=3)
+    lat, cid = geo_clustered_matrix(spec, rng)
+    validate_latency_matrix(lat)
+    assert len(np.unique(cid)) == 3
+    same = cid[:, None] == cid[None, :]
+    off = ~np.eye(12, dtype=bool)
+    intra = lat[same & off]
+    inter = lat[~same]
+    # clusters exist: intra-cluster latency well below inter-cluster
+    assert intra.mean() * 3 < inter.mean()
+
+
+def test_tiv_detection_matches_bruteforce():
+    rng = np.random.default_rng(1)
+    lat, _ = geo_clustered_matrix(GeoClusterSpec(n_nodes=8, n_clusters=3), rng)
+    v = tiv_pairs(lat)
+    n = 8
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            best = min(
+                lat[i, r] + lat[r, j] for r in range(n) if r != i and r != j
+            )
+            assert v[i, j] == (best < lat[i, j])
+
+
+def test_one_relay_effective_improves_and_is_consistent():
+    rng = np.random.default_rng(2)
+    lat, _ = geo_clustered_matrix(GeoClusterSpec(n_nodes=10, n_clusters=3), rng)
+    eff, relay = one_relay_effective(lat)
+    assert (eff <= lat + 1e-9).all()
+    n = 10
+    for i in range(n):
+        for j in range(n):
+            r = relay[i, j]
+            if r >= 0:
+                assert eff[i, j] == pytest.approx(lat[i, r] + lat[r, j])
+                assert eff[i, j] < lat[i, j]
+            elif i != j:
+                assert eff[i, j] == pytest.approx(lat[i, j])
+
+
+def test_all_pairs_shortest_lower_bounds_one_relay():
+    rng = np.random.default_rng(3)
+    lat, _ = geo_clustered_matrix(GeoClusterSpec(n_nodes=9, n_clusters=3), rng)
+    eff, _ = one_relay_effective(lat)
+    sp = all_pairs_shortest(lat)
+    assert (sp <= eff + 1e-9).all()
+
+
+def test_jitter_trace_shape_and_positivity():
+    rng = np.random.default_rng(4)
+    base = aws_latency_matrix()
+    tr = jitter_trace(base, 50, rng)
+    assert len(tr) == 50
+    for f in [tr[0], tr[25], tr[49]]:
+        validate_latency_matrix(f)
+        assert np.allclose(f, f.T)
+    # jitter stays within sane multiplicative bounds
+    ratio = tr.frames / np.where(base > 0, base, 1.0)
+    off = ~np.eye(10, dtype=bool)
+    assert ratio[:, off].max() < 20.0
+    assert ratio[:, off].min() > 0.2
+
+
+def test_wan_tiv_prevalence_in_paper_band():
+    """Fig 5: 28-57% of pairs violate the triangle inequality on WAN data."""
+    fracs = []
+    fracs.append(tiv_fraction(aws_latency_matrix()))
+    rng = np.random.default_rng(5)
+    for seed in range(3):
+        lat, _ = geo_clustered_matrix(
+            GeoClusterSpec(n_nodes=15, n_clusters=4, congestion_frac=0.35),
+            np.random.default_rng(seed),
+        )
+        fracs.append(tiv_fraction(lat))
+    assert max(fracs) > 0.15  # violations are common
+    assert all(f < 0.8 for f in fracs)
+
+
+def test_bandwidth_matrix_lan_wan_gap():
+    rng = np.random.default_rng(6)
+    cid = np.array([0, 0, 1, 1, 2, 2])
+    bw = bandwidth_matrix(cid, 6, rng)
+    same = cid[:, None] == cid[None, :]
+    off = ~np.eye(6, dtype=bool)
+    assert (bw[same & off] == 10000.0).all()
+    assert bw[~same].max() <= 1000.0
+
+
+def test_validate_rejects_bad_matrices():
+    with pytest.raises(ValueError):
+        validate_latency_matrix(np.ones((3, 4)))
+    m = np.ones((3, 3))
+    with pytest.raises(ValueError):
+        validate_latency_matrix(m)  # nonzero diagonal
+    m = np.zeros((3, 3))
+    m[0, 1] = -1
+    with pytest.raises(ValueError):
+        validate_latency_matrix(m)

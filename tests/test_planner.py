@@ -1,0 +1,207 @@
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.latency import GeoClusterSpec, geo_clustered_matrix
+from repro.core.planner import (
+    GroupPlan,
+    Replanner,
+    agglomerative_grouping,
+    best_plan,
+    hierarchical_comm_cost,
+    k_search_band,
+    kcenter_grouping,
+    kmeans_grouping,
+    milp_grouping,
+    no_grouping,
+    optimal_k,
+    plan_cost,
+    random_grouping,
+)
+
+
+def _random_lat(n, seed):
+    lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=max(2, n // 3)),
+        np.random.default_rng(seed),
+    )
+    return lat
+
+
+def _brute_force_optimum(lat, k):
+    """Exhaustive search over all (partition, aggregator) choices."""
+    n = lat.shape[0]
+    best = np.inf
+    # assign each node a group label; enforce canonical labeling via first-occurrence
+    for labels in itertools.product(range(k), repeat=n):
+        if len(set(labels)) != k:
+            continue
+        groups = [tuple(i for i in range(n) if labels[i] == j) for j in range(k)]
+        for aggs in itertools.product(*groups):
+            plan = GroupPlan(tuple(groups), tuple(aggs))
+            best = min(best, plan_cost(lat, plan))
+    return best
+
+
+@pytest.mark.parametrize("n,k,seed", [(6, 2, 0), (6, 3, 1), (7, 2, 2)])
+def test_milp_matches_bruteforce_optimum(n, k, seed):
+    lat = _random_lat(n, seed)
+    plan = milp_grouping(lat, k)
+    plan.validate(n)
+    opt = _brute_force_optimum(lat, k)
+    assert plan_cost(lat, plan) == pytest.approx(opt, rel=1e-6)
+
+
+def test_milp_valid_and_beats_heuristics():
+    lat = _random_lat(12, 3)
+    k = 4
+    p_milp = milp_grouping(lat, k)
+    p_milp.validate(12)
+    for p in [
+        kcenter_grouping(lat, k),
+        agglomerative_grouping(lat, k),
+        kmeans_grouping(lat, k),
+        random_grouping(lat, k, np.random.default_rng(0)),
+    ]:
+        p.validate(12)
+        assert plan_cost(lat, p_milp) <= plan_cost(lat, p) + 1e-9
+
+
+def test_milp_tiv_never_worse():
+    lat = _random_lat(10, 4)
+    k = 3
+    p = milp_grouping(lat, k)
+    p_tiv = milp_grouping(lat, k, tiv=True)
+    # with relays available the achievable objective can only improve
+    assert plan_cost(lat, p_tiv, tiv=True) <= plan_cost(lat, p) + 1e-9
+
+
+def test_kcenter_two_approximation():
+    """Gonzalez guarantees max intra-group radius <= 2 * optimum."""
+    for seed in range(5):
+        lat = _random_lat(10, 10 + seed)
+        effs = np.maximum(lat, lat.T)
+        k = 3
+        plan = kcenter_grouping(lat, k)
+        radius = 0.0
+        for g, a in zip(plan.groups, plan.aggregators):
+            for i in g:
+                radius = max(radius, effs[i, a])
+        # brute-force optimal k-center radius
+        n = 10
+        best = np.inf
+        for centers in itertools.combinations(range(n), k):
+            r = effs[:, centers].min(axis=1).max()
+            best = min(best, r)
+        assert radius <= 2.0 * best + 1e-9
+
+
+def test_optimal_k_formula_minimizes_cost_model():
+    for n in [10, 15, 25, 50]:
+        ks = optimal_k(n)
+        costs = {k: hierarchical_comm_cost(n, k) for k in range(1, n + 1)}
+        k_best = min(costs, key=costs.get)
+        # continuous optimum within 1 of the discrete minimizer
+        assert abs(ks - k_best) <= 1.5
+        # paper: for N<=25, k* falls in [N/5, N/2]
+        if n <= 25:
+            assert n / 5 <= ks <= n / 2
+
+
+def test_k_search_band_contains_kstar():
+    for n in [6, 10, 15, 25, 50]:
+        band = k_search_band(n)
+        ks = optimal_k(n)
+        assert any(abs(k - ks) <= 1.5 for k in band)
+        assert all(2 <= k <= n - 1 for k in band)
+
+
+def test_best_plan_runs_and_validates():
+    lat = _random_lat(12, 7)
+    plan = best_plan(lat, method="kcenter")
+    plan.validate(12)
+    # either a grouped plan from the guided band or the flat fallback
+    # (adaptive: hierarchy only wins when intra latency << inter)
+    assert plan.k in k_search_band(12) or plan.k == 12
+
+
+def test_best_plan_bandwidth_aware_prefers_grouping():
+    """With a payload hint and LAN >> WAN bandwidth, NIC contention makes the
+    flat all-to-all expensive and the planner groups; with a flat/uniform
+    network it correctly stays flat (no free lunch from aggregation when the
+    aggregator's NIC is the same as everyone else's)."""
+    from repro.core.latency import geo_clustered_matrix, GeoClusterSpec
+
+    rng = np.random.default_rng(7)
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=12, n_clusters=4), rng
+    )
+    same = regions[:, None] == regions[None, :]
+    bw = np.where(same, 10_000.0, 100.0)
+    np.fill_diagonal(bw, np.inf)
+    p = best_plan(lat, method="kcenter", payload_bytes=500_000.0,
+                  bandwidth_mbps=bw)
+    p.validate(12)
+    assert p.k < 12
+
+
+def test_no_grouping_is_singletons():
+    lat = _random_lat(5, 8)
+    p = no_grouping(lat)
+    assert p.k == 5
+    assert all(len(g) == 1 for g in p.groups)
+
+
+def test_plan_failover_and_drop():
+    lat = _random_lat(8, 9)
+    p = milp_grouping(lat, 3)
+    # failover: promote another member in the largest group
+    j = max(range(p.k), key=lambda j: len(p.groups[j]))
+    if len(p.groups[j]) > 1:
+        other = next(i for i in p.groups[j] if i != p.aggregators[j])
+        p2 = p.replace_aggregator(j, other)
+        p2.validate(8)
+        assert p2.aggregators[j] == other
+    # drop a node entirely
+    victim = p.aggregators[0]
+    p3 = p.drop_node(victim)
+    p3.validate(None)
+    assert victim not in [i for g in p3.groups for i in g]
+    assert p3.n == 7
+
+
+def test_replanner_damping():
+    lat = _random_lat(8, 10)
+    calls = []
+
+    def plan_fn(l):
+        calls.append(1)
+        return kcenter_grouping(l, 3)
+
+    rp = Replanner(plan_fn, threshold=0.2, sustain=3)
+    p0 = rp.observe(lat)
+    assert len(calls) == 1
+    # small noise: no replan ever
+    for _ in range(10):
+        rp.observe(lat * 1.05)
+    assert len(calls) == 1
+    # transient big spike (shorter than sustain): suppressed
+    rp.observe(lat * 2.0)
+    rp.observe(lat * 2.0)
+    rp.observe(lat * 1.01)
+    assert len(calls) == 1
+    # sustained deviation: replan fires
+    for _ in range(3):
+        rp.observe(lat * 2.0)
+    assert len(calls) == 2
+
+
+def test_replanner_node_failure_forces_replan():
+    lat = _random_lat(8, 11)
+    rp = Replanner(lambda l: kcenter_grouping(l, 3), sustain=2)
+    rp.observe(lat)
+    p = rp.on_node_failure(0)
+    assert 0 not in [i for g in p.groups for i in g]
+    rp.observe(lat)  # forced replan
+    assert rp.replan_count == 2

@@ -1,0 +1,143 @@
+"""Hypothesis property tests for the CRDT merge (paper Sec 4.4 ACI claims).
+
+System invariants respected by the generators (as guaranteed by OCC version
+assignment and the epoch barrier):
+
+* per (key, version) the full payload is unique — versions are the writing
+  transaction's (epoch, seq, node), and a transaction writes a key once;
+* a payload-stripped (meta-only) delivery of an update only occurs in a
+  multiset that also contains (or whose receiver already merged) the full
+  payload for that (key, version) — null-effect filtering strips payloads
+  the receiver provably holds.
+
+Under these invariants we verify the paper's invariance equation: for any
+permutation pi and any multiplicity vector k,
+
+    S ⊕ ⊕_i ⊕_{j=1..k_i} u_{pi(i)}  ==  S ⊕ u_1 ⊕ ... ⊕ u_m
+"""
+
+import hashlib
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.crdt import DeltaCRDTStore, Update, Version, merge_updates
+
+_keys = st.sampled_from(["a", "b", "c", "d"])
+_versions = st.builds(
+    Version,
+    epoch=st.integers(0, 2),
+    seq=st.integers(0, 5),
+    node=st.integers(0, 2),
+)
+
+
+def _val(key: str, ver: Version) -> bytes:
+    return hashlib.sha1(f"{key}:{ver.epoch}:{ver.seq}:{ver.node}".encode()).digest()[:4]
+
+
+@st.composite
+def update_sets(draw):
+    """A set of unique-version updates (the epoch's logical update set U)."""
+    n = draw(st.integers(0, 12))
+    seen = set()
+    base = []
+    for _ in range(n):
+        key = draw(_keys)
+        ver = draw(_versions)
+        if (key, ver) in seen:
+            continue
+        seen.add((key, ver))
+        base.append(Update(key, _val(key, ver), ver))
+    return base
+
+
+@st.composite
+def deliveries(draw):
+    """(base set U, delivered multiset with duplicated deliveries).
+
+    Null-effect payload stripping happens at the wire layer (the receiver
+    reconstructs the full update), so stores only ever see full updates.
+    """
+    base = draw(update_sets())
+    delivered = []
+    for u in base:
+        delivered.extend([u] * draw(st.integers(1, 3)))
+    return base, delivered
+
+
+def _apply(store, ups):
+    for u in ups:
+        store.apply(u)
+    return store
+
+
+@given(deliveries(), st.randoms())
+@settings(max_examples=300, deadline=None)
+def test_invariance_permutation_and_multiplicity(pair, rnd):
+    base, delivered = pair
+    reference = _apply(DeltaCRDTStore(), base)
+    shuffled = list(delivered)
+    rnd.shuffle(shuffled)
+    merged = _apply(DeltaCRDTStore(), shuffled)
+    assert merged.full_state() == reference.full_state()
+    assert merged.digest() == reference.digest()
+
+
+@given(update_sets(), update_sets())
+@settings(max_examples=200, deadline=None)
+def test_associativity_via_grouped_merge(a, b):
+    """(S ⊕ A) ⊕ B == S ⊕ (A ∪ B) — delayed batches merge identically."""
+    s1 = _apply(_apply(DeltaCRDTStore(), a), b)
+    s2 = _apply(DeltaCRDTStore(), a + b)
+    assert s1.full_state() == s2.full_state()
+
+
+@given(update_sets())
+@settings(max_examples=200, deadline=None)
+def test_merge_store_equals_apply(ups):
+    """Merging two replicas' stores == applying the union of their deltas."""
+    half = len(ups) // 2
+    ra = _apply(DeltaCRDTStore(), ups[:half])
+    rb = _apply(DeltaCRDTStore(), ups[half:])
+    ra.merge_store(rb)
+    s = _apply(DeltaCRDTStore(), ups)
+    assert ra.full_state() == s.full_state()
+
+
+@given(update_sets())
+@settings(max_examples=200, deadline=None)
+def test_pure_merge_matches_store(ups):
+    m = merge_updates(ups)
+    s = _apply(DeltaCRDTStore(), ups)
+    assert set(m) == set(s.keys())
+    for k, u in m.items():
+        assert s.version_of(k) == u.version
+
+
+@given(deliveries(), st.randoms())
+@settings(max_examples=150, deadline=None)
+def test_epoch_boundary_buffering(pair, rnd):
+    """Delayed updates merged one epoch late converge to the same state
+    (Sec 4.4: delayed visibility, unchanged correctness)."""
+    base, delivered = pair
+    on_time = [u for u in delivered if u.version.epoch <= 1]
+    delayed = [u for u in delivered if u.version.epoch > 1]
+    s_prompt = _apply(DeltaCRDTStore(), delivered)
+    s_late = _apply(DeltaCRDTStore(), on_time)
+    rnd.shuffle(delayed)
+    _apply(s_late, delayed)
+    assert s_prompt.full_state() == s_late.full_state()
+
+
+@given(deliveries())
+@settings(max_examples=150, deadline=None)
+def test_partition_heal_convergence(pair):
+    """Partitioned replicas that buffered different subsets converge after
+    exchanging stores (Sec 4.4: partitions affect progress, not correctness)."""
+    base, delivered = pair
+    side_a = _apply(DeltaCRDTStore(), delivered[::2])
+    side_b = _apply(DeltaCRDTStore(), delivered[1::2])
+    side_a.merge_store(side_b)
+    side_b.merge_store(side_a)
+    assert side_a.full_state() == side_b.full_state()

@@ -1,0 +1,104 @@
+"""Hypothesis property tests for the Planner/Communicator invariants."""
+
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.latency import one_relay_effective, all_pairs_shortest
+from repro.core.planner import (
+    GroupPlan,
+    hierarchical_comm_cost,
+    kcenter_grouping,
+    no_grouping,
+    optimal_k,
+    plan_cost,
+    random_grouping,
+)
+from repro.core.schedule import (
+    all_to_all_schedule,
+    hierarchical_schedule,
+    max_messages_per_node,
+    messages_per_node,
+)
+from repro.core.simulator import WANSimulator
+
+
+@st.composite
+def latency_matrices(draw):
+    n = draw(st.integers(4, 12))
+    seed = draw(st.integers(0, 10_000))
+    rng = np.random.default_rng(seed)
+    # random positive symmetric matrix with zero diagonal
+    a = rng.uniform(1.0, 200.0, size=(n, n))
+    lat = (a + a.T) / 2.0
+    np.fill_diagonal(lat, 0.0)
+    return lat
+
+
+@given(latency_matrices(), st.integers(2, 5))
+@settings(max_examples=60, deadline=None)
+def test_round_guarantee_any_plan(lat, k):
+    """Eq. 6-7 holds for every valid plan on every network."""
+    n = lat.shape[0]
+    k = min(k, n)
+    plan = kcenter_grouping(lat, k)
+    sched = hierarchical_schedule(plan, 100.0)
+    assert max_messages_per_node(sched, n) <= 2 * (n - 1)
+    # per-node counts: aggregators highest, but all bounded
+    cnt = messages_per_node(sched, n)
+    assert cnt.sum() == 2 * sched.n_transfers
+
+
+@given(latency_matrices(), st.integers(2, 5))
+@settings(max_examples=60, deadline=None)
+def test_plan_cost_vs_simulated_latency(lat, k):
+    """With infinite bandwidth, the simulated 3-phase makespan never exceeds
+    the planner's (pessimistic, symmetric) cost bound — and the lower bound
+    never exceeds any schedule's makespan."""
+    n = lat.shape[0]
+    k = min(k, n)
+    plan = kcenter_grouping(lat, k)
+    sim = WANSimulator(lat)
+    m = sim.run(hierarchical_schedule(plan, 0.0)).makespan_ms
+    assert m <= plan_cost(lat, plan) + 1e-6
+    assert sim.lower_bound_ms() <= m + 1e-6
+    assert sim.lower_bound_ms() <= sim.run(all_to_all_schedule(n, 0.0)).makespan_ms + 1e-6
+
+
+@given(latency_matrices())
+@settings(max_examples=60, deadline=None)
+def test_relay_paths_sound(lat):
+    """Effective latencies are consistent: eff <= direct, eff >= shortest."""
+    eff, relay = one_relay_effective(lat)
+    sp = all_pairs_shortest(lat)
+    assert (eff <= lat + 1e-9).all()
+    assert (sp <= eff + 1e-9).all()
+    n = lat.shape[0]
+    for i in range(n):
+        for j in range(n):
+            r = relay[i, j]
+            if r >= 0:
+                assert abs(eff[i, j] - (lat[i, r] + lat[r, j])) < 1e-9
+
+
+@given(st.integers(4, 60))
+@settings(max_examples=60, deadline=None)
+def test_kstar_minimizes_cost_model(n):
+    ks = optimal_k(n)
+    assert 1.0 <= ks <= n
+    costs = {k: hierarchical_comm_cost(n, k) for k in range(1, n + 1)}
+    k_best = min(costs, key=costs.get)
+    assert abs(ks - k_best) <= 1.5
+
+
+@given(latency_matrices(), st.integers(2, 5), st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_plans_always_valid(lat, k, seed):
+    n = lat.shape[0]
+    for plan in (
+        kcenter_grouping(lat, min(k, n)),
+        random_grouping(lat, min(k, n), np.random.default_rng(seed)),
+        no_grouping(lat),
+    ):
+        plan.validate(n)
+        assert plan_cost(lat, plan) >= 0.0

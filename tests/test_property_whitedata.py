@@ -1,0 +1,108 @@
+"""Hypothesis property tests: the white-data filter is task-preserving.
+
+The paper's central filtering claim (Sec 4.3): removing white data changes
+no receiver-visible state.  We verify over random transaction batches that
+merging the filtered batch produces the same value state as merging the raw
+batch (given global validation semantics), plus soundness of intra-group
+abort detection and the round-trip byte accounting.
+"""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.crdt import DeltaCRDTStore, Update, Version
+from repro.core.occ import Txn, txn_updates, validate_epoch
+from repro.core.whitedata import filter_group_batch
+
+# small alphabets on purpose: collisions generate conflicts, dups and nulls
+_keys = st.sampled_from([f"k{i}" for i in range(8)])
+_vals = st.sampled_from([bytes([i]) for i in range(4)])
+
+
+@st.composite
+def txn_batches(draw):
+    n_txns = draw(st.integers(1, 20))
+    txns = []
+    for tid in range(n_txns):
+        n_writes = draw(st.integers(1, 4))
+        writes = {}
+        for _ in range(n_writes):
+            writes[draw(_keys)] = draw(_vals)
+        txns.append(
+            Txn(
+                txn_id=tid,
+                node=draw(st.integers(0, 3)),
+                epoch=1,
+                seq=draw(st.integers(0, 50)),
+                write_set=tuple(writes.items()),
+            )
+        )
+    return txns
+
+
+@st.composite
+def snapshots(draw):
+    snap = DeltaCRDTStore()
+    for i in range(draw(st.integers(0, 8))):
+        snap.apply(Update(draw(_keys), draw(_vals), Version(0, i, 0)))
+    return snap
+
+
+@given(snapshots(), txn_batches())
+@settings(max_examples=200, deadline=None)
+def test_filter_value_lossless(snap, txns):
+    fr = filter_group_batch(txns, snap)
+    # raw pipeline: drop globally-aborted txns, merge the rest
+    _, aborted = validate_epoch(txns, snap)
+    raw = snap.snapshot()
+    raw.apply_many(
+        u for t in txns if t.txn_id not in aborted for u in txn_updates(t)
+    )
+    # filtered pipeline: merge the kept updates only
+    filt = snap.snapshot()
+    filt.apply_many(fr.kept)
+    assert raw.value_state() == filt.value_state()
+
+
+@given(snapshots(), txn_batches())
+@settings(max_examples=200, deadline=None)
+def test_intra_group_abort_subset_of_global(snap, txns):
+    """Group-local aborts (any subset) are sound w.r.t. global validation."""
+    fr = filter_group_batch(txns[: len(txns) // 2], snap)
+    _, aborted_global = validate_epoch(txns, snap)
+    assert fr.aborted_txns <= aborted_global
+
+
+@given(snapshots(), txn_batches())
+@settings(max_examples=200, deadline=None)
+def test_byte_accounting_consistent(snap, txns):
+    fr = filter_group_batch(txns, snap)
+    st_ = fr.stats
+    assert st_.kept_bytes <= st_.total_bytes
+    assert st_.kept_updates <= st_.total_updates
+    # wire bytes for kept updates never exceed their full size (null-effect
+    # entries travel as metadata only)
+    assert st_.kept_bytes <= sum(u.nbytes for u in fr.kept)
+    dropped_updates = (
+        st_.aborted_updates + st_.duplicate_updates + st_.stale_updates
+    )
+    assert st_.total_updates == st_.kept_updates + dropped_updates
+    assert 0.0 <= st_.white_byte_ratio <= 1.0
+    assert st_.wire_bytes <= st_.total_bytes + 24 * st_.total_updates
+
+
+@given(snapshots(), txn_batches())
+@settings(max_examples=100, deadline=None)
+def test_filter_idempotent(snap, txns):
+    """Filtering an already-filtered batch keeps it fixed (no over-pruning).
+
+    Reconstructs txns from kept updates; aborted set must be empty the
+    second time and kept content unchanged.
+    """
+    fr1 = filter_group_batch(txns, snap)
+    survivors = [t for t in txns if t.txn_id not in fr1.aborted_txns]
+    fr2 = filter_group_batch(survivors, snap)
+    assert fr2.aborted_txns == set()
+    kept1 = {(u.key, u.value, u.version) for u in fr1.kept}
+    kept2 = {(u.key, u.value, u.version) for u in fr2.kept}
+    assert kept1 == kept2

@@ -1,0 +1,145 @@
+import numpy as np
+import pytest
+
+from repro.core.latency import GeoClusterSpec, geo_clustered_matrix
+from repro.core.planner import kcenter_grouping, milp_grouping, no_grouping
+from repro.core.schedule import (
+    all_to_all_schedule,
+    hierarchical_schedule,
+    leader_schedule,
+    max_messages_per_node,
+    messages_per_node,
+)
+from repro.core.simulator import WANSimulator
+
+
+def _lat(n, seed=0):
+    lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=max(2, n // 3)),
+        np.random.default_rng(seed),
+    )
+    return lat
+
+
+def test_all_to_all_counts():
+    n = 7
+    s = all_to_all_schedule(n, 100.0)
+    assert s.n_transfers == n * (n - 1)
+    cnt = messages_per_node(s, n)
+    assert (cnt == 2 * (n - 1)).all()
+
+
+def test_round_guarantee_eq6_eq7():
+    """Paper Eq. 6-7: C_geococo <= C_baseline = 2(N-1) per node."""
+    for seed in range(5):
+        n = 10
+        lat = _lat(n, seed)
+        plan = kcenter_grouping(lat, 3)
+        s = hierarchical_schedule(plan, 100.0)
+        assert max_messages_per_node(s, n) <= 2 * (n - 1)
+
+
+def test_hierarchical_phases_and_payloads():
+    n = 6
+    lat = _lat(n, 1)
+    plan = milp_grouping(lat, 2)
+    pay = np.arange(1.0, n + 1.0) * 10
+    s = hierarchical_schedule(plan, pay)
+    assert len(s.phases) == 3
+    gathers = s.phases[0]
+    exchanges = s.phases[1]
+    scatters = s.phases[2]
+    # every non-aggregator sends exactly once in phase 1
+    simple = set(range(n)) - set(plan.aggregators)
+    assert {t.src for t in gathers} == simple
+    # phase 2 is a full mesh among aggregators
+    assert len(exchanges) == plan.k * (plan.k - 1)
+    # exchange payload = consolidated group payload
+    g0 = plan.groups[0]
+    expect = sum(pay[i] for i in g0)
+    t0 = next(t for t in exchanges if t.src == plan.aggregators[0])
+    assert t0.nbytes == pytest.approx(expect)
+    # scatter payload = total minus the member's own contribution
+    total = pay.sum()
+    for t in scatters:
+        assert t.nbytes == pytest.approx(total - pay[t.dst])
+
+
+def test_tiv_relay_reduces_makespan():
+    rng = np.random.default_rng(3)
+    lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=9, n_clusters=3, congestion_frac=0.5,
+                       congestion_mult=(2.0, 4.0)),
+        rng,
+    )
+    plan = milp_grouping(lat, 3)
+    sim = WANSimulator(lat)
+    s_direct = hierarchical_schedule(plan, 100.0)
+    s_tiv = hierarchical_schedule(plan, 100.0, lat=lat, tiv=True)
+    m_direct = sim.run(s_direct).makespan_ms
+    m_tiv = sim.run(s_tiv).makespan_ms
+    assert m_tiv <= m_direct + 1e-9
+
+
+def test_simulator_transfer_math():
+    lat = np.array([[0.0, 50.0], [50.0, 0.0]])
+    bw = 100.0  # Mbps
+    sim = WANSimulator(lat, bw)
+    s = all_to_all_schedule(2, 1_000_000.0)  # 1 MB each way
+    r = sim.run(s)
+    # 1 MB over 100 Mbps = 80 ms + 50 ms propagation
+    assert r.makespan_ms == pytest.approx(130.0, rel=1e-6)
+    assert r.bytes_out.tolist() == [1_000_000.0, 1_000_000.0]
+    assert r.total_bytes == pytest.approx(2_000_000.0)
+
+
+def test_simulator_loss_penalty():
+    lat = np.array([[0.0, 10.0], [10.0, 0.0]])
+    sim0 = WANSimulator(lat, np.inf, loss=0.0)
+    sim5 = WANSimulator(lat, np.inf, loss=0.05, retx_timeout_ms=100.0)
+    s = all_to_all_schedule(2, 0.0)
+    assert sim5.run(s).makespan_ms > sim0.run(s).makespan_ms
+
+
+def test_relay_accounting():
+    lat = np.array(
+        [[0.0, 100.0, 10.0], [100.0, 0.0, 10.0], [10.0, 10.0, 0.0]]
+    )
+    from repro.core.schedule import Transfer, TransmissionSchedule
+
+    s = TransmissionSchedule([[Transfer(0, 1, 500.0, via=2)]])
+    sim = WANSimulator(lat)
+    r = sim.run(s)
+    assert r.makespan_ms == pytest.approx(20.0)  # two 10ms hops
+    assert r.bytes_out[0] == 500.0 and r.bytes_out[2] == 500.0
+    assert r.bytes_in[2] == 500.0 and r.bytes_in[1] == 500.0
+    assert r.msg_matrix[0, 2] == 1 and r.msg_matrix[2, 1] == 1
+
+
+def test_lower_bound_below_any_schedule():
+    for seed in range(4):
+        n = 8
+        lat = _lat(n, seed + 20)
+        sim = WANSimulator(lat)
+        lb = sim.lower_bound_ms()
+        m_flat = sim.run(all_to_all_schedule(n, 0.0)).makespan_ms
+        plan = kcenter_grouping(lat, 3, tiv=True)
+        m_hier = sim.run(
+            hierarchical_schedule(plan, 0.0, lat=lat, tiv=True)
+        ).makespan_ms
+        assert lb <= m_flat + 1e-9
+        assert lb <= m_hier + 1e-9
+
+
+def test_leader_schedule_grouped_vs_flat():
+    n = 9
+    lat = _lat(n, 30)
+    plan = kcenter_grouping(lat, 3)
+    s_flat = leader_schedule(n, 0, 1000.0)
+    s_grp = leader_schedule(n, 0, 1000.0, plan)
+    assert s_flat.n_transfers == n - 1
+    # leader sends at most k messages in phase 1 under grouping
+    assert len(s_grp.phases[0]) <= plan.k
+    # every node still receives the payload
+    received = {t.dst for p in s_grp.phases for t in p} | {0}
+    assert received == set(range(n))

@@ -1,0 +1,109 @@
+"""End-to-end behaviour tests for the full GeoCoCo system.
+
+Covers the complete paper pipeline on the database plane (monitor -> planner
+-> filter -> communicator -> replication engine) including fault injection.
+The JAX training-plane integration lives in test_train_integration.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    LatencyMonitor,
+    VivaldiSystem,
+    WANSimulator,
+    YCSBConfig,
+    YCSBGenerator,
+    best_plan,
+    geo_clustered_matrix,
+    hierarchical_schedule,
+    jitter_trace,
+)
+
+
+def test_full_pipeline_monitor_to_engine():
+    """Monitor feeds the planner; the engine synchronizes losslessly and
+    beats the flat baseline on makespan, WAN bytes and throughput."""
+    n = 8
+    rng = np.random.default_rng(0)
+    lat, regions = geo_clustered_matrix(GeoClusterSpec(n_nodes=n, n_clusters=3), rng)
+    trace = jitter_trace(lat, 25, np.random.default_rng(1))
+
+    # 1) monitoring: EWMA estimates track the truth
+    mon = LatencyMonitor(n)
+    est = None
+    for f in trace.frames[:10]:
+        est = mon.probe_all(f, rng, noise=0.02)
+    off = ~np.eye(n, dtype=bool)
+    rel = np.abs(est[off] - trace[9][off]) / trace[9][off]
+    assert np.median(rel) < 0.25
+
+    # 2) end-to-end: the engine with everything on vs everything off
+    results = {}
+    for name, (grp, filt) in {
+        "origin": (False, False),
+        "geococo": (True, True),
+    }.items():
+        same = regions[:, None] == regions[None, :]
+        bw = np.where(same, 10_000.0, 200.0).astype(float)
+        np.fill_diagonal(bw, np.inf)
+        eng = GeoCluster(
+            EngineConfig(n_nodes=n, grouping=grp, filtering=filt, tiv=True,
+                         planner="kcenter"),
+            bandwidth_mbps=bw,
+            wan_mask=~same,
+            seed=3,
+        )
+        gen = YCSBGenerator(
+            YCSBConfig(n_keys=2000, theta=0.8, read_ratio=0.4,
+                       hot_write_frac=0.35, hot_locality=True,
+                       rewrite_frac=0.15),
+            n, seed=5, node_region=regions,
+        )
+        results[name] = eng.run(gen, trace, txns_per_node=6)
+
+    a, b = results["origin"], results["geococo"]
+    assert a.state_digest == b.state_digest                 # consistency preserved
+    assert a.committed == b.committed
+    assert b.makespans_ms.mean() < a.makespans_ms.mean()    # faster rounds
+    assert b.wan_bytes < a.wan_bytes                        # fewer WAN bytes
+    assert b.throughput_tps > a.throughput_tps              # higher throughput
+
+
+def test_aggregator_failover_round_still_correct():
+    """Sec 4.4: aggregator failure -> drop + promote -> surviving nodes
+    still complete a correct round; failed node moves no bytes."""
+    n = 6
+    rng = np.random.default_rng(2)
+    lat, _ = geo_clustered_matrix(GeoClusterSpec(n_nodes=n, n_clusters=2), rng)
+    plan = best_plan(lat, method="kcenter")
+    victim = plan.aggregators[0]
+    fallback = plan.drop_node(victim)
+    fallback.validate(None)
+    sim = WANSimulator(lat)
+    sched = hierarchical_schedule(fallback, 1000.0)
+    res = sim.run(sched)
+    assert res.makespan_ms > 0
+    assert res.bytes_out[victim] == 0 and res.bytes_in[victim] == 0
+
+
+def test_vivaldi_scales_monitoring():
+    """Sec 6.4: network coordinates slash probing cost while keeping
+    actionable accuracy; verification sampling never hurts."""
+    n = 48
+    rng = np.random.default_rng(3)
+    lat, _ = geo_clustered_matrix(GeoClusterSpec(n_nodes=n, n_clusters=5), rng)
+    viv = VivaldiSystem(n, seed=1)
+    viv.fit(lat, rounds=60, samples_per_node=6, rng=rng)
+    full_mesh_probes = 60 * n * (n - 1)
+    assert viv.probe_count <= 60 * n * 6          # ~13% of full-mesh probing
+    assert viv.probe_count < 0.15 * full_mesh_probes
+    err = viv.median_rel_error(lat)
+    assert err < 0.60                              # approximate but informative
+    est = viv.verify_and_correct(lat, sample_frac=0.1, rng=rng)
+    off = ~np.eye(n, dtype=bool)
+    rel = np.abs(est[off] - lat[off]) / lat[off]
+    assert np.median(rel) <= err + 1e-9
