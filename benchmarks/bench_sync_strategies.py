@@ -1,10 +1,16 @@
 """Beyond-paper: GeoCoCo gradient-sync strategies on the JAX training plane.
 
-Reads dry-run artifacts (results/dryrun/*.json) when available to report the
-measured per-axis collective link bytes; otherwise falls back to the
-analytic model in ``repro.dist.collectives.estimate_sync_bytes``.  Shows the
-inter-pod (WAN-analogue) byte reduction of hier(FSDP-scattered) and
-geococo(top-k filtered) over the flat baseline.
+Three views of the same strategy surface:
+
+* **analytic** — ``repro.dist.collectives.estimate_sync_bytes`` per model:
+  inter-pod bytes for flat (replicated), hier (FSDP-scattered) and geococo
+  (top-k filtered) sync;
+* **WAN-plane cross-check** — the identical 2-pod exchange expressed as a
+  ``repro.core.schedule`` transmission schedule: the simulator's byte
+  accounting must reproduce the device-plane reduction factors (the two
+  planes share one wire model through the strategy registry);
+* **measured** — dry-run artifacts (results/dryrun/*.json), when present,
+  report the per-axis collective link bytes XLA actually emits.
 """
 
 from __future__ import annotations
@@ -13,11 +19,37 @@ import glob
 import json
 import os
 
+import numpy as np
+
 from repro.configs.registry import get_config
+from repro.core.planner import no_grouping
+from repro.core.schedule import all_to_all_schedule, hierarchical_schedule
 from repro.dist.collectives import SyncConfig, estimate_sync_bytes
 from repro.models.model import param_count
 
 from .common import check
+
+N_PODS = 2
+DENSITY = 0.10
+
+
+def _wan_plane_bytes(shard_bytes: float, *, filtered: float | None) -> float:
+    """Total WAN bytes of one 2-pod exchange on the core plane.
+
+    Each pod is a node; with singleton groups the hierarchical schedule
+    degenerates to the pure aggregator exchange — the WAN mirror of the
+    device plane's pod-boundary all-reduce.  ``filtered`` replaces the
+    consolidated group payload (post top-k bytes), as the white-data filter
+    does for write sets.
+    """
+    lat = np.array([[0.0, 50.0], [50.0, 0.0]])
+    plan = no_grouping(lat)
+    if filtered is None:
+        sched = hierarchical_schedule(plan, shard_bytes)
+    else:
+        gp = np.full(plan.k, filtered)
+        sched = hierarchical_schedule(plan, shard_bytes, group_payload_bytes=gp)
+    return sched.total_bytes
 
 
 def run(quick: bool = True) -> dict:
@@ -26,14 +58,42 @@ def run(quick: bool = True) -> dict:
     for arch in ("minitron-8b", "deepseek-coder-33b", "deepseek-v3-671b"):
         n = param_count(get_config(arch))
         shard = n / 256  # FSDP+TP shard per device within a pod
-        flat = estimate_sync_bytes(n / 16, SyncConfig(strategy="flat"), 2)
-        hier = estimate_sync_bytes(shard, SyncConfig(strategy="hier"), 2)
-        geo = estimate_sync_bytes(shard, SyncConfig(strategy="geococo",
-                                                    density=0.10), 2)
+        flat = estimate_sync_bytes(n / 16, SyncConfig(strategy="flat"), N_PODS)
+        hier = estimate_sync_bytes(shard, SyncConfig(strategy="hier"), N_PODS)
+        geo = estimate_sync_bytes(
+            shard, SyncConfig(strategy="geococo", density=DENSITY), N_PODS
+        )
         analytic[arch] = {
             "flat_gb": flat / 1e9, "hier_gb": hier / 1e9, "geo_gb": geo / 1e9,
             "hier_vs_flat": 1 - hier / flat, "geo_vs_hier": 1 - geo / hier,
         }
+
+    # WAN-plane cross-check: same exchange as a core-plane transmission
+    # schedule.  The WAN side computes its filtered payload from first
+    # principles (kept fraction at chunk granularity, value+index cost) —
+    # independently of estimate_sync_bytes — so ratio agreement actually
+    # tests the estimator's model and the schedule's byte accounting
+    # against each other, not against themselves.
+    ref = analytic["minitron-8b"]
+    shard_bytes = ref["hier_gb"] * 1e9
+    scfg = SyncConfig(strategy="geococo", density=DENSITY)
+    kept_fraction = max(1, round(DENSITY * scfg.chunk)) / scfg.chunk
+    value_and_index = 2.0  # 4 B value + 4 B chunk-local index, / 4 B dense
+    wan_dense = _wan_plane_bytes(shard_bytes, filtered=None)
+    wan_filtered = _wan_plane_bytes(
+        shard_bytes, filtered=shard_bytes * kept_fraction * value_and_index
+    )
+    device_ratio = ref["geo_gb"] / ref["hier_gb"]
+    wan_ratio = wan_filtered / wan_dense
+    two_plane = {
+        "wan_dense_gb": wan_dense / 1e9,
+        "wan_filtered_gb": wan_filtered / 1e9,
+        "device_geo_over_hier": device_ratio,
+        "wan_geo_over_hier": wan_ratio,
+    }
+    print(f"  two-plane bytes: device geo/hier={device_ratio:.3f}  "
+          f"WAN-schedule geo/hier={wan_ratio:.3f}  "
+          f"(dense {wan_dense/1e9:.2f} GB -> filtered {wan_filtered/1e9:.2f} GB)")
 
     # measured from dry-run artifacts, if present
     measured = {}
@@ -55,9 +115,13 @@ def run(quick: bool = True) -> dict:
         check(all(v["geo_vs_hier"] > 0.5 for v in analytic.values()),
               "Sync: white-data filtering cuts another >50% at density 0.10",
               ", ".join(f"{k}={v['geo_vs_hier']:.1%}" for k, v in analytic.items())),
+        check(abs(device_ratio - wan_ratio) < 0.01,
+              "Two-plane consistency: WAN schedule + first-principles filter "
+              "payload reproduce the device-plane byte reduction",
+              f"device={device_ratio:.4f} wan={wan_ratio:.4f}"),
     ]
     return {"figure": "sync-strategies", "analytic": analytic,
-            "measured": measured, "checks": checks}
+            "two_plane": two_plane, "measured": measured, "checks": checks}
 
 
 if __name__ == "__main__":

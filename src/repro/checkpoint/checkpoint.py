@@ -72,9 +72,18 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
 
 
 def save_async(ckpt_dir: str, step: int, tree: Any) -> threading.Thread:
-    """Non-blocking save; returns the writer thread (join() to fence)."""
-    # jax arrays are immutable: capturing the pytree IS the snapshot
-    t = threading.Thread(target=save, args=(ckpt_dir, step, tree), daemon=True)
+    """Non-blocking save; returns the writer thread (join() to fence).
+
+    The host snapshot happens *synchronously*: jax arrays are immutable,
+    but the train step donates its input buffers — a lazily-captured device
+    array can be deleted before the writer thread serializes it ("Array has
+    been deleted"), silently dropping the checkpoint.  Copying to host
+    first fences against donation; only the file I/O runs on the thread.
+    """
+    host_tree = jax.tree.map(np.asarray, tree)
+    t = threading.Thread(
+        target=save, args=(ckpt_dir, step, host_tree), daemon=True
+    )
     t.start()
     return t
 

@@ -12,6 +12,7 @@ Public API:
   :mod:`repro.core.replication` (end-to-end multi-master engine).
 """
 
+from . import strategies
 from .crdt import DeltaCRDTStore, Update, Version, merge_updates
 from .latency import (
     AWS_REGIONS,
@@ -54,7 +55,13 @@ from .schedule import (
     messages_per_node,
 )
 from .simulator import RoundResult, WANSimulator
-from .whitedata import FilterResult, FilterStats, filter_group_batch, white_ratio
+from .whitedata import (
+    FilterResult,
+    FilterStats,
+    filter_group_batch,
+    no_filter,
+    white_ratio,
+)
 from .workload import (
     TPCC_MIXES,
     TPCCConfig,

@@ -26,6 +26,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from . import strategies as _strategies
 from .latency import one_relay_effective, validate_latency_matrix
 
 __all__ = [
@@ -528,25 +529,58 @@ def best_plan(
         )
         return sim.run(sched).makespan_ms
 
+    try:
+        plan_fn = _strategies.get("planner", method)
+    except KeyError as e:
+        raise ValueError(str(e)) from None
     cands = [(rank(no_grouping(lat)), no_grouping(lat))]
     for k in k_search_band(lat.shape[0], tolerance=tolerance):
-        if method == "milp":
-            p = milp_grouping(lat, k, tiv=tiv, tiv_margin=tiv_margin, time_limit_s=time_limit_s)
-        elif method == "kcenter":
-            p = kcenter_grouping(lat, k, tiv=tiv, tiv_margin=tiv_margin)
-        else:
-            raise ValueError(f"unknown planner method {method!r}")
+        p = plan_fn(lat, k, tiv=tiv, tiv_margin=tiv_margin,
+                    time_limit_s=time_limit_s)
         cands.append((rank(p), p))
     return min(cands, key=lambda t: t[0])[1]
 
 
+# ---------------------------------------------------------------------------
+# registry wiring: every grouping strategy is addressable by name with the
+# uniform planner contract fn(lat, k, *, tiv, tiv_margin, time_limit_s, rng)
+# ---------------------------------------------------------------------------
+
+
+_strategies.register(
+    "planner", "milp",
+    lambda lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0, rng=None:
+        milp_grouping(lat, k, tiv=tiv, tiv_margin=tiv_margin,
+                      time_limit_s=time_limit_s),
+)
+_strategies.register(
+    "planner", "kcenter",
+    lambda lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0, rng=None:
+        kcenter_grouping(lat, k, tiv=tiv, tiv_margin=tiv_margin),
+)
+_strategies.register(
+    "planner", "agglomerative",
+    lambda lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0, rng=None:
+        agglomerative_grouping(lat, k),
+)
+_strategies.register(
+    "planner", "kmeans",
+    lambda lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0, rng=None:
+        kmeans_grouping(lat, k, rng),
+)
+_strategies.register(
+    "planner", "random",
+    lambda lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0, rng=None:
+        random_grouping(lat, k, rng),
+)
+_strategies.register(
+    "planner", "none",
+    lambda lat, k=0, **_kw: no_grouping(lat),
+)
+
+# legacy view of the registry (kept for callers that index by name directly)
 STRATEGIES: dict[str, Callable[..., GroupPlan]] = {
-    "milp": milp_grouping,
-    "kcenter": kcenter_grouping,
-    "agglomerative": agglomerative_grouping,
-    "kmeans": kmeans_grouping,
-    "random": random_grouping,
-    "none": lambda lat, k=0: no_grouping(lat),
+    name: fn for name, fn in _strategies.items("planner")
 }
 
 

@@ -29,6 +29,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from . import strategies as _strategies
 from .crdt import DeltaCRDTStore, Update
 from .occ import Txn, committed_updates, txn_updates, validate_epoch
 from .planner import GroupPlan, Replanner, no_grouping
@@ -46,19 +47,80 @@ __all__ = ["EngineConfig", "EpochStats", "RunStats", "GeoCluster", "RaftCluster"
 
 @dataclasses.dataclass
 class EngineConfig:
+    """Engine configuration with a named-strategy surface.
+
+    ``sync_strategy`` names a registered ``wan_sync`` preset (``flat`` /
+    ``hier`` / ``geococo`` / ``geococo-zlib`` — the same names the device
+    plane's ``SyncConfig`` uses); when given it drives the per-stage
+    booleans.  The booleans remain writable for back-compat (the original
+    API) and for ablations without an exact preset — ``__post_init__``
+    derives the nearest ``sync_strategy`` name from them.  ``schedule_name``
+    and ``filter_name`` select registered implementations for the grouping
+    transmission and the aggregator filter, so new builders and codecs plug
+    in without touching this engine.
+    """
+
     n_nodes: int
     epoch_ms: float = 10.0
     txn_exec_us: float = 40.0
+    sync_strategy: str | None = None   # named wan_sync preset (overrides booleans)
     grouping: bool = True              # GeoCoCo hierarchical transmission
     filtering: bool = True             # white-data filter at aggregators
     tiv: bool = True                   # overlay relay exploitation
     tiv_margin: float = 0.05
     compression: bool = False          # zlib on WAN payloads (Fig 16)
     compression_level: int = 6
-    planner: str = "milp"              # "milp" | "kcenter"
+    schedule_name: str | None = None   # registered "schedule" builder
+    filter_name: str | None = None     # registered "filter" implementation
+    planner: str = "milp"              # registered "planner" strategy
     replan_threshold: float = 0.20
     replan_sustain: int = 3
     planner_time_limit_s: float = 10.0
+
+    def __post_init__(self):
+        # A named strategy drives the stage booleans (the shim direction);
+        # nothing else is written back, so `dataclasses.replace` on the
+        # booleans of a boolean-configured instance behaves as expected
+        # (with sync_strategy set, the name wins on replace — by design;
+        # ablate via the booleans or pass sync_strategy=None).
+        if self.sync_strategy is not None:
+            spec = _strategies.get("wan_sync", self.sync_strategy)
+            self.grouping = spec.grouping
+            self.filtering = spec.filtering
+            self.tiv = spec.tiv
+            self.compression = spec.compression
+        _strategies.get("planner", self.planner)      # fail fast on typos
+        if self.schedule_name is not None:
+            _strategies.get("schedule", self.schedule_name)
+        if self.filter_name is not None:
+            _strategies.get("filter", self.filter_name)
+
+    @property
+    def resolved_sync_strategy(self) -> str:
+        if self.sync_strategy is not None:
+            return self.sync_strategy
+        return _strategies.wan_strategy_name(
+            grouping=self.grouping, filtering=self.filtering,
+            tiv=self.tiv, compression=self.compression,
+        )
+
+    @property
+    def resolved_schedule_name(self) -> str:
+        if self.schedule_name is not None:
+            return self.schedule_name
+        if self.sync_strategy is not None:
+            return _strategies.get("wan_sync", self.sync_strategy).schedule
+        return "hierarchical" if self.grouping else "all_to_all"
+
+    @property
+    def resolved_filter_name(self) -> str:
+        if not self.filtering:
+            return "none"
+        if self.filter_name is not None:
+            return self.filter_name
+        if self.sync_strategy is not None:
+            return _strategies.get("wan_sync", self.sync_strategy).filter
+        return "whitedata"
 
 
 @dataclasses.dataclass
@@ -107,7 +169,7 @@ class RunStats:
 
     @property
     def makespans_ms(self) -> np.ndarray:
-        return np.array([e.sync_ms for e in self.epochs])
+        return np.array([e.sync_ms for e in self.epochs], dtype=float)
 
     @property
     def white_stats(self) -> FilterStats:
@@ -119,7 +181,10 @@ class RunStats:
 
     @property
     def p99_sync_ms(self) -> float:
-        return float(np.percentile(self.makespans_ms, 99))
+        ms = self.makespans_ms
+        if ms.size == 0:
+            return 0.0
+        return float(np.percentile(ms, 99))
 
 
 def _compressed_size(updates: Sequence[Update], level: int) -> int:
@@ -156,6 +221,32 @@ class GeoCluster:
         self.wan_mask = wan_mask
         self.store = DeltaCRDTStore()  # replicated state (identical on all nodes)
         self.rng = np.random.default_rng(seed)
+        # strategy resolution happens once, through the two-plane registry:
+        # the engine never hard-codes a builder or filter implementation
+        self._schedule_fn = _strategies.get("schedule", cfg.resolved_schedule_name)
+        self._flat_schedule_fn = _strategies.get("schedule", "all_to_all")
+        self._filter_fn = _strategies.get("filter", cfg.resolved_filter_name)
+        if cfg.grouping:
+            # fail fast, not mid-run: the grouping engine drives builders
+            # with hierarchical_schedule's contract (plan, node payloads,
+            # group_payload_bytes, lat/tiv kwargs)
+            import inspect
+
+            params = inspect.signature(self._schedule_fn).parameters
+            if "group_payload_bytes" not in params:
+                raise ValueError(
+                    f"schedule {cfg.resolved_schedule_name!r} cannot drive the "
+                    "grouping engine: it does not follow the hierarchical "
+                    "builder contract (missing 'group_payload_bytes')"
+                )
+        elif cfg.schedule_name not in (None, "all_to_all"):
+            # the non-grouping engine runs the flat all-to-all round by
+            # definition; a differently-named builder would be silently
+            # ignored and the run mislabeled
+            raise ValueError(
+                f"schedule {cfg.schedule_name!r} requires grouping=True "
+                "(the flat engine always runs 'all_to_all')"
+            )
         self._replanner = self._make_replanner()
         self.plan_time_s = 0.0
         self.msg_matrix = np.zeros((cfg.n_nodes, cfg.n_nodes), dtype=int)
@@ -231,23 +322,20 @@ class GeoCluster:
             fstats = FilterStats()
             for j, (group, agg) in enumerate(zip(plan.groups, plan.aggregators)):
                 gtxns = [t for i in group for t in txns_by_node.get(i, [])]
+                t0 = time.perf_counter()
+                fr = self._filter_fn(gtxns, snapshot)
                 if cfg.filtering:
-                    t0 = time.perf_counter()
-                    fr = filter_group_batch(gtxns, snapshot)
+                    # the no_filter passthrough's byte accounting is not a
+                    # filtering cost — keep the baseline's filter CPU at 0
                     filter_cpu_ms += (time.perf_counter() - t0) * 1e3
-                    fstats = fstats.merge(fr.stats)
-                    if cfg.compression:
-                        group_payload[j] = _compressed_size(
-                            fr.kept, cfg.compression_level
-                        ) + 24 * (fr.stats.total_updates - fr.stats.kept_updates)
-                    else:
-                        group_payload[j] = fr.stats.wire_bytes
+                fstats = fstats.merge(fr.stats)
+                dropped = fr.stats.total_updates - fr.stats.kept_updates
+                if cfg.compression:
+                    group_payload[j] = _compressed_size(
+                        fr.kept, cfg.compression_level
+                    ) + 24 * dropped
                 else:
-                    kept = [u for t in gtxns for u in txn_updates(t)]
-                    if cfg.compression:
-                        group_payload[j] = _compressed_size(kept, cfg.compression_level)
-                    else:
-                        group_payload[j] = _batch_bytes(kept)
+                    group_payload[j] = fr.stats.wire_bytes
             if cfg.compression:
                 node_payload = np.array(
                     [
@@ -259,7 +347,7 @@ class GeoCluster:
                     ],
                     dtype=float,
                 )
-            schedule = hierarchical_schedule(
+            schedule = self._schedule_fn(
                 plan,
                 node_payload,
                 group_payload_bytes=group_payload,
@@ -288,7 +376,7 @@ class GeoCluster:
                 ],
                 dtype=float,
             )
-            schedule = all_to_all_schedule(n, payload)
+            schedule = self._flat_schedule_fn(n, payload)
             plan_method = "none"
 
         res = sim.run(schedule)

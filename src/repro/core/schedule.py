@@ -23,6 +23,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from . import strategies as _strategies
 from .latency import one_relay_effective
 from .planner import GroupPlan
 
@@ -195,6 +196,13 @@ def leader_schedule(
                 phase2.append(Transfer(tgt, i, payload_bytes, tag="relay"))
     phases = [p for p in (phase1, phase2) if p]
     return TransmissionSchedule(phases, label=label + "+geococo")
+
+
+# registry wiring: transmission-schedule builders are addressable by name so
+# the engine (and future planes: Raft, multi-cloud) resolve them uniformly
+_strategies.register("schedule", "all_to_all", all_to_all_schedule)
+_strategies.register("schedule", "hierarchical", hierarchical_schedule)
+_strategies.register("schedule", "leader", leader_schedule)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,180 @@
+"""Unified two-plane synchronization strategy registry.
+
+The paper's three levers — latency-aware grouping (Sec 4.2), task-preserving
+filtering (Sec 4.3), and consistency-guaranteed transmission (Sec 4.4) —
+exist in two planes of this repo:
+
+* the **WAN-simulation plane** (``repro.core``): transaction write-set
+  synchronization over a simulated geo-distributed WAN, and
+* the **device plane** (``repro.dist``): gradient synchronization over the
+  ``pod`` axis of a JAX mesh, where the pod boundary is the WAN analogue.
+
+Both planes register their strategies here by ``(kind, name)`` so that new
+scenarios (a Raft plane, multi-cloud topologies, new filter codecs) plug in
+without editing ``replication.py`` or ``train_step.py``.  Registered kinds:
+
+============  ===============================================================
+kind          contract of a registered entry
+============  ===============================================================
+planner       ``fn(lat, k, *, tiv=False, tiv_margin=0.05, time_limit_s=5.0)
+              -> GroupPlan`` — grouping strategy (Sec 4.2 / Fig. 12)
+schedule      schedule builder; see :mod:`repro.core.schedule` for the
+              per-builder signatures (``all_to_all`` / ``hierarchical`` /
+              ``leader``)
+filter        ``fn(txns, snapshot, **opts) -> FilterResult`` — aggregator-
+              side white-data removal (Sec 4.3)
+device_sync   :class:`DeviceSyncStrategy` — gradient exchange over the
+              mesh ``pod`` axis (``repro.dist.collectives``)
+wan_sync      :class:`WanSyncStrategy` — named preset binding the engine's
+              grouping/filtering/tiv/compression stages together
+============  ===============================================================
+
+Names are intentionally shared across planes: ``flat`` / ``hier`` /
+``geococo`` mean the same thing to ``EngineConfig`` (WAN plane) and
+``SyncConfig`` (device plane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator
+
+__all__ = [
+    "register",
+    "get",
+    "names",
+    "kinds",
+    "items",
+    "WanSyncStrategy",
+    "wan_strategy_name",
+]
+
+
+_REGISTRY: dict[str, dict[str, Any]] = {}
+
+
+def register(kind: str, name: str, obj: Any = None):
+    """Register ``obj`` under ``(kind, name)``.
+
+    Usable directly (``register("filter", "none", fn)``) or as a decorator
+    (``@register("planner", "milp")``).  Re-registering a name replaces the
+    previous entry (last one wins — lets downstream code override presets).
+    """
+    if obj is None:
+
+        def deco(f):
+            _REGISTRY.setdefault(kind, {})[name] = f
+            return f
+
+        return deco
+    _REGISTRY.setdefault(kind, {})[name] = obj
+    return obj
+
+
+def get(kind: str, name: str) -> Any:
+    try:
+        return _REGISTRY[kind][name]
+    except KeyError:
+        known = sorted(_REGISTRY.get(kind, {}))
+        raise KeyError(
+            f"no {kind!r} strategy named {name!r}; registered: {known}"
+        ) from None
+
+
+def names(kind: str) -> list[str]:
+    return sorted(_REGISTRY.get(kind, {}))
+
+
+def kinds() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def items(kind: str) -> Iterator[tuple[str, Any]]:
+    yield from sorted(_REGISTRY.get(kind, {}).items())
+
+
+# ---------------------------------------------------------------------------
+# WAN-plane named presets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WanSyncStrategy:
+    """One named configuration of the engine's synchronization stages.
+
+    ``schedule`` / ``filter`` are names resolved through this registry at
+    engine-construction time, so a preset can point at a custom builder
+    without the engine knowing about it.
+    """
+
+    name: str
+    grouping: bool
+    filtering: bool
+    tiv: bool
+    compression: bool = False
+    schedule: str = "hierarchical"
+    filter: str = "whitedata"
+
+    def describe(self) -> str:
+        stages = [
+            "grouping" if self.grouping else "flat",
+            f"filter:{self.filter}" if self.filtering else "no-filter",
+            "tiv" if self.tiv else "no-tiv",
+        ]
+        if self.compression:
+            stages.append("zlib")
+        return f"{self.name}({', '.join(stages)})"
+
+
+register(
+    "wan_sync",
+    "flat",
+    WanSyncStrategy("flat", grouping=False, filtering=False, tiv=False,
+                    schedule="all_to_all", filter="none"),
+)
+register(
+    "wan_sync",
+    "hier",
+    WanSyncStrategy("hier", grouping=True, filtering=False, tiv=False,
+                    filter="none"),
+)
+register(
+    "wan_sync",
+    "geococo",
+    WanSyncStrategy("geococo", grouping=True, filtering=True, tiv=True),
+)
+register(
+    "wan_sync",
+    "geococo-zlib",
+    WanSyncStrategy("geococo-zlib", grouping=True, filtering=True, tiv=True,
+                    compression=True),
+)
+
+
+def wan_strategy_name(
+    *, grouping: bool, filtering: bool, tiv: bool, compression: bool
+) -> str:
+    """Faithful name for a legacy-boolean ``EngineConfig``.
+
+    The structural base (``flat`` / ``hier`` / ``geococo[-zlib]``) comes
+    from grouping/filtering/compression; when the remaining stages differ
+    from the registered preset, a ``+stage``/``-stage`` modifier is
+    appended (the planner's ``milp+tiv`` idiom), so the name never claims a
+    preset whose stages the config does not run.  Modified names are *not*
+    registered — round-tripping one through ``EngineConfig(sync_strategy=)``
+    fails loudly rather than silently changing the config.  ``tiv`` only
+    matters under grouping (the flat round has no relay hop) and is ignored
+    otherwise.
+    """
+    if not grouping:
+        base = "flat"
+    elif not filtering:
+        base = "hier"
+    else:
+        base = "geococo-zlib" if compression else "geococo"
+    spec = get("wan_sync", base)
+    if grouping and tiv != spec.tiv:
+        base += "+tiv" if tiv else "-tiv"
+    if compression != spec.compression:
+        base += "+zlib" if compression else "-zlib"
+    return base

@@ -25,10 +25,17 @@ from __future__ import annotations
 import dataclasses
 from typing import Iterable, Sequence
 
+from . import strategies as _strategies
 from .crdt import DeltaCRDTStore, Update, Version
 from .occ import Txn, txn_updates, validate_epoch
 
-__all__ = ["FilterStats", "FilterResult", "filter_group_batch", "white_ratio"]
+__all__ = [
+    "FilterStats",
+    "FilterResult",
+    "filter_group_batch",
+    "no_filter",
+    "white_ratio",
+]
 
 
 @dataclasses.dataclass
@@ -166,5 +173,27 @@ def filter_group_batch(
     return FilterResult(kept=kept, aborted_txns=aborted, stats=stats)
 
 
+def no_filter(txns: Sequence[Txn], snapshot: DeltaCRDTStore) -> FilterResult:
+    """Baseline passthrough: every update is kept and paid on the wire.
+
+    Registered so the engine resolves filtering-off through the same
+    registry path as the real filter (``wire_bytes`` then equals the raw
+    batch bytes — nothing dropped, no tombstone overhead)."""
+    kept = [u for t in txns for u in txn_updates(t)]
+    stats = FilterStats(
+        total_updates=len(kept),
+        total_bytes=sum(u.nbytes for u in kept),
+        kept_updates=len(kept),
+        kept_bytes=sum(u.nbytes for u in kept),
+    )
+    return FilterResult(kept=kept, aborted_txns=set(), stats=stats)
+
+
 def white_ratio(stats: FilterStats) -> float:
     return stats.white_byte_ratio
+
+
+# registry wiring: aggregator-side filters by name (two-plane registry —
+# the device plane's `geococo` top-k exchange is the gradient analogue)
+_strategies.register("filter", "whitedata", filter_group_batch)
+_strategies.register("filter", "none", no_filter)

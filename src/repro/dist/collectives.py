@@ -1,0 +1,321 @@
+"""Device-plane synchronization: GeoCoCo's three levers over the mesh
+``pod`` axis (the WAN analogue of the training stack).
+
+This is the device-plane half of the two-plane strategy surface (see
+``repro.core.strategies``):
+
+* **grouping / hierarchy** (paper Sec 4.2): ``hier`` syncs FSDP-scattered
+  gradient shards instead of full replicas, and :func:`relay_psum` expresses
+  the aggregator relay ring (TIV-exploiting overlay paths map to the ring
+  ``order``);
+* **task-preserving filtering** (Sec 4.3): ``geococo`` runs
+  :func:`chunked_topk_exchange` — density-based top-k selection with
+  error-feedback residuals, the gradient analogue of white-data removal
+  (dropped mass is *carried*, not lost, so the training task is preserved);
+* **consistency-guaranteed transmission** (Sec 4.4): every strategy is a
+  deterministic collective — all pods hold identical synced gradients after
+  the exchange, mirroring the epoch-commit guarantee of the WAN plane.
+
+Strategies register under ``("device_sync", name)`` in the shared registry,
+so the WAN plane (``EngineConfig``) and the device plane (``SyncConfig``)
+resolve the *same names* — ``flat`` / ``hier`` / ``geococo``.
+
+:func:`estimate_sync_bytes` is the analytic wire model the benchmarks
+cross-check against the WAN simulator and against bytes actually moved by
+:func:`sync_gradients`.
+
+Deployment note: on a single-controller runtime (this container) the
+backward pass has already all-reduced gradients over every mesh axis by the
+time ``sync_gradients`` runs, so the pod exchange operates on pod-identical
+inputs — ``pmean`` is then numerically a no-op while the ``geococo``
+sparsification still changes the update exactly as on a real multi-pod
+deployment.  On a multi-controller deployment the same collectives perform
+the real exchange; the wire model is identical either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core import strategies
+
+__all__ = [
+    "SyncConfig",
+    "DeviceSyncStrategy",
+    "sync_gradients",
+    "relay_psum",
+    "chunked_topk_exchange",
+    "estimate_sync_bytes",
+]
+
+_INDEX_BYTES = 4  # chunk-local top-k index cost per transmitted value
+
+
+# ---------------------------------------------------------------------------
+# strategy objects + registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSyncStrategy:
+    """One named gradient-exchange strategy.
+
+    ``wire_values(n, cfg, shard_factor)`` returns ``(dense_values,
+    sparse_values)`` — how many dense values and how many (value, index)
+    pairs of an ``n``-element leaf cross the pod boundary per all-reduce;
+    the split keeps the analytic estimator and the measured nonzero counts
+    comparable.  ``shard_factor`` is how many in-pod devices a leaf is
+    split across: the filter's ``min_leaf_size`` / chunking decisions
+    happen on the shard each device actually holds.
+    """
+
+    name: str
+    needs_residuals: bool
+    wire_values: Callable[[float, "SyncConfig", float], tuple[float, float]]
+
+
+def _dense_wire(n: float, cfg: "SyncConfig", shard_factor: float = 1.0):
+    return float(n), 0.0
+
+
+def _topk_wire(n: float, cfg: "SyncConfig", shard_factor: float = 1.0):
+    local_n = n / max(shard_factor, 1.0)
+    if local_n < cfg.min_leaf_size:
+        return float(n), 0.0  # small (per-shard) leaves are exchanged densely
+    n_chunks = math.ceil(local_n / cfg.chunk)
+    k = max(1, int(round(cfg.density * cfg.chunk)))
+    return 0.0, float(n_chunks * min(k, cfg.chunk) * max(shard_factor, 1.0))
+
+
+strategies.register(
+    "device_sync", "flat",
+    DeviceSyncStrategy("flat", needs_residuals=False, wire_values=_dense_wire),
+)
+strategies.register(
+    "device_sync", "hier",
+    DeviceSyncStrategy("hier", needs_residuals=False, wire_values=_dense_wire),
+)
+strategies.register(
+    "device_sync", "geococo",
+    DeviceSyncStrategy("geococo", needs_residuals=True, wire_values=_topk_wire),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """Device-plane sync strategy configuration.
+
+    ``strategy`` must name a registered ``device_sync`` strategy.  ``density``
+    is the kept fraction per chunk for the filtered exchange; ``chunk`` the
+    top-k selection granularity; ``min_leaf_size`` the element count below
+    which a leaf skips filtering (norm scales and biases are cheap and
+    high-impact — always sent densely, a task-preservation choice).
+    """
+
+    strategy: str = "hier"
+    density: float = 0.10
+    chunk: int = 2048
+    min_leaf_size: int = 4096
+
+    def __post_init__(self):
+        known = strategies.names("device_sync")
+        if self.strategy not in known:
+            raise ValueError(
+                f"unknown sync strategy {self.strategy!r}; registered: {known}"
+            )
+        if not (0.0 < self.density <= 1.0):
+            raise ValueError(f"density must be in (0, 1], got {self.density}")
+        if self.chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {self.chunk}")
+        if self.min_leaf_size < 0:
+            raise ValueError(
+                f"min_leaf_size must be >= 0, got {self.min_leaf_size}"
+            )
+
+    @property
+    def spec(self) -> DeviceSyncStrategy:
+        return strategies.get("device_sync", self.strategy)
+
+    @property
+    def needs_residuals(self) -> bool:
+        return self.spec.needs_residuals
+
+
+# ---------------------------------------------------------------------------
+# collectives
+# ---------------------------------------------------------------------------
+
+
+def relay_psum(x: jnp.ndarray, axis: str = "pod", *, order=None) -> jnp.ndarray:
+    """All-reduce over ``axis`` via an explicit relay ring.
+
+    ``order`` is the ring order of pod indices — the device-plane mirror of
+    the WAN plane's TIV relay paths (``repro.core.latency.one_relay_effective``):
+    a profitable overlay path becomes the ring neighbor ordering, so the
+    slowest direct pair never carries traffic.  The result equals
+    ``jax.lax.psum`` (up to float reassociation).
+    """
+    if order is not None:
+        n = len(order)
+    else:
+        n = int(jax.lax.psum(1, axis))
+        order = tuple(range(n))
+    if n <= 1:
+        return x
+    perm = [(int(order[i]), int(order[(i + 1) % n])) for i in range(n)]
+    acc = x
+    msg = x
+    for _ in range(n - 1):
+        msg = jax.lax.ppermute(msg, axis, perm=perm)
+        acc = acc + msg
+    return acc
+
+
+def _topk_mask(m: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per-row mask selecting the ``k`` largest-|.| entries of ``m``."""
+    rows, chunk = m.shape
+    if k >= chunk:
+        return jnp.ones_like(m)
+    _, idx = jax.lax.top_k(jnp.abs(m), k)                      # (rows, k)
+    row_ids = jnp.repeat(jnp.arange(rows), k)
+    return jnp.zeros_like(m).at[row_ids, idx.ravel()].set(1.0)
+
+
+def chunked_topk_exchange(
+    grad: jnp.ndarray,
+    residual: jnp.ndarray | None,
+    *,
+    axis: str = "pod",
+    density: float = 0.10,
+    chunk: int = 2048,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Density-based top-k gradient exchange with error feedback.
+
+    The device-plane analogue of white-data filtering: per ``chunk``-sized
+    block, only the ``density`` fraction of largest-magnitude entries of
+    ``grad + residual`` crosses the pod boundary; the rest stays in the new
+    residual and is *carried to the next step* (error feedback), so no task
+    signal is dropped — only deferred.  Returns ``(pmean_of_sent,
+    new_residual)``.  With ``density=1.0`` this is exactly a ``pmean`` and
+    the residual returns to zero.
+    """
+    dtype = grad.dtype
+    acc = grad.astype(jnp.float32)
+    if residual is not None:
+        acc = acc + residual.astype(jnp.float32)
+    shape = acc.shape
+    flat = acc.ravel()
+    n = flat.size
+    pad = (-n) % chunk
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    m = flat.reshape(-1, chunk)
+    k = max(1, int(round(density * chunk)))
+    mask = _topk_mask(m, k)
+    sent = m * mask
+    new_res = m - sent
+    out = jax.lax.pmean(sent, axis)
+    out = out.ravel()[:n].reshape(shape).astype(dtype)
+    new_res = new_res.ravel()[:n].reshape(shape)
+    return out, new_res
+
+
+def sync_gradients(
+    grads: Any,
+    residuals: Any,
+    cfg: SyncConfig,
+    *,
+    axis: str = "pod",
+    n_pods: int | None = None,
+    leaf_specs: Any = None,
+) -> tuple[Any, Any]:
+    """Synchronize a gradient pytree across pods under ``cfg.strategy``.
+
+    Must run where ``axis`` is a bound (manual) mesh axis when
+    ``n_pods > 1`` — e.g. inside a ``shard_map`` over the pod axis.  With a
+    single pod this is the identity (the input objects are returned
+    untouched).  ``leaf_specs`` is accepted for callers that track per-leaf
+    partitioning; the exchange itself operates on whatever slice of each
+    leaf the calling region holds.
+
+    Returns ``(synced_grads, new_residuals)``.  ``new_residuals`` is ``None``
+    whenever ``residuals`` is ``None`` and the strategy carries no state.
+    """
+    del leaf_specs
+    if n_pods is None or n_pods <= 1:
+        return grads, residuals
+    spec = cfg.spec
+    if not spec.needs_residuals:
+        synced = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        return synced, residuals
+
+    res = residuals
+    if res is None:
+        res = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, r):
+        if g.size < cfg.min_leaf_size:
+            return jax.lax.pmean(g, axis), r
+        return chunked_topk_exchange(
+            g, r, axis=axis, density=cfg.density, chunk=cfg.chunk
+        )
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = td.flatten_up_to(res)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    synced = td.unflatten([o[0] for o in out])
+    new_res = td.unflatten([o[1] for o in out])
+    return synced, new_res
+
+
+# ---------------------------------------------------------------------------
+# analytic wire model
+# ---------------------------------------------------------------------------
+
+
+def estimate_sync_bytes(
+    n_params: float | Any,
+    cfg: SyncConfig,
+    n_pods: int,
+    *,
+    bytes_per_value: int = 4,
+    shard_factor: float = 1.0,
+) -> float:
+    """Analytic inter-pod bytes per device per step.
+
+    ``n_params`` is either an element count (the per-device shard size the
+    strategy actually exchanges — full replica for ``flat``, FSDP shard for
+    ``hier``/``geococo``) or a gradient pytree of *logical* leaves, in
+    which case the per-leaf accounting (``min_leaf_size`` dense fallback,
+    chunk-granular top-k) matches :func:`sync_gradients`.  When leaves are
+    split across in-pod devices, pass ``shard_factor`` (devices per leaf):
+    the filter operates on the shard each device actually holds, so the
+    dense-fallback threshold applies to ``leaf.size / shard_factor``, not
+    the logical size.
+
+    The exchange volume model is the ring all-reduce ``2 (P-1)/P`` factor;
+    filtered values pay ``bytes_per_value + 4`` for the chunk-local index.
+    The benchmarks cross-check this model against the WAN simulator's
+    hierarchical schedule and against bytes actually moved on the mesh.
+    """
+    if n_pods <= 1:
+        return 0.0
+    spec = cfg.spec
+    if isinstance(n_params, (int, float)):
+        sizes = [float(n_params)]
+    else:
+        sizes = [float(l.size) for l in jax.tree.leaves(n_params)]
+    dense = sparse = 0.0
+    for n in sizes:
+        d, s = spec.wire_values(n, cfg, shard_factor)
+        dense += d
+        sparse += s
+    ring = 2.0 * (n_pods - 1) / n_pods
+    return ring * (
+        dense * bytes_per_value + sparse * (bytes_per_value + _INDEX_BYTES)
+    )

@@ -1,0 +1,141 @@
+"""JAX version-compatibility layer for the device plane.
+
+The device plane targets the modern single-controller API surface
+(``jax.shard_map`` with ``axis_names`` / ``check_vma``, ``jax.make_mesh``
+with ``axis_types``).  The container's baked toolchain ships jax 0.4.x,
+where:
+
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and spells partial
+  automation ``auto=`` / replication checking ``check_rep=``;
+* **partial-auto shard_map is unusable on the CPU backend** — mixing a
+  manual axis with auto (GSPMD) axes trips XLA CHECK failures
+  (``spmd_partitioner.cc IsManualSubgroup`` aborts on ``ppermute``,
+  scatters, and ``with_sharding_constraint``) and ``PartitionId`` lowering
+  is rejected outright.  Fully-manual shard_map (every mesh axis manual) is
+  solid, as is pure GSPMD.
+
+So on old JAX this module lowers every ``shard_map`` request to the
+fully-manual form: ``axis_names`` smaller than the mesh means the caller's
+body only uses collectives over those axes, and running the body replicated
+over the remaining axes is semantically identical (the remaining axes see
+replicated in/out specs).  The higher layers are arranged around that
+constraint — model compute runs under pure GSPMD, and only the pod-boundary
+gradient exchange enters a (fully-manual) shard_map.
+
+On a modern JAX the wrappers delegate to the native API unchanged.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = [
+    "HAS_NATIVE_SHARD_MAP",
+    "has_partial_auto",
+    "shard_map",
+    "make_mesh",
+    "install",
+]
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+_PARTIAL_AUTO: bool | None = None
+
+
+def has_partial_auto() -> bool:
+    """Whether partial-auto shard_map (manual pod + GSPMD data/model in one
+    region) can be trusted on the active backend.
+
+    Conservative by design: requires the modern native API *and* a
+    non-CPU backend — the CPU partitioner is where the CHECK failures
+    live, and API presence alone (e.g. latest jax[cpu] in CI) says nothing
+    about the backend.  Lazy because ``jax.default_backend()`` initializes
+    the runtime.
+    """
+    global _PARTIAL_AUTO
+    if _PARTIAL_AUTO is None:
+        _PARTIAL_AUTO = (
+            HAS_NATIVE_SHARD_MAP and jax.default_backend() != "cpu"
+        )
+    return _PARTIAL_AUTO
+
+
+def shard_map(
+    f,
+    mesh: Mesh | None = None,
+    *,
+    in_specs: Any,
+    out_specs: Any,
+    axis_names: set | frozenset | None = None,
+    check_vma: bool = False,
+):
+    """Version-portable ``shard_map``.
+
+    ``axis_names`` is the set of axes the body treats manually (new-JAX
+    meaning).  On old JAX the body is lowered fully manual over *all* mesh
+    axes; this is only valid when in/out specs leave the non-manual axes
+    replicated — exactly the contract the device plane's callers follow.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        kwargs: dict[str, Any] = {}
+        if axis_names is not None:
+            names = set(axis_names)
+            if mesh is not None and not has_partial_auto():
+                # CPU backend: partial-auto is the unsafe configuration even
+                # on modern JAX — widen to fully manual (callers' non-manual
+                # axes carry replicated specs, so semantics are unchanged)
+                names = set(mesh.axis_names)
+            kwargs["axis_names"] = names
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` on old JAX."""
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None) -> Mesh:
+    """``jax.make_mesh`` that tolerates the ``axis_types`` kwarg on old JAX
+    (axis types only exist on the modern explicit-sharding stack)."""
+    if axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def install() -> None:
+    """Backfill the modern names onto the installed ``jax``.
+
+    Applied at ``repro.dist`` import so test/benchmark code written against
+    the modern API (``jax.shard_map``, ``jax.sharding.AxisType``) runs on
+    the 0.4.x toolchain unmodified.  No-ops on a modern JAX.
+    """
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = shard_map
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        # modern API returns the current abstract mesh; old-JAX callers get
+        # None ("not inside an explicit/manual mesh region"), which is the
+        # truthful answer for the pure-GSPMD + fully-manual layering here
+        jax.sharding.get_abstract_mesh = lambda: None
+
+
+install()

@@ -1,0 +1,64 @@
+"""Parameter partitioning rules per sync strategy.
+
+The strategy surface decides what crosses the pod (WAN-analogue) boundary:
+
+* ``flat`` — parameters fully replicated; every pod would push a complete
+  gradient replica across the WAN (the paper's all-to-all baseline).
+* ``hier`` / ``geococo`` — FSDP over ``data`` + tensor parallelism over
+  ``model`` inside each pod, so only per-device *shards* cross the pod
+  boundary (grouping: the pod is the group, the shard-holding device its
+  aggregator for that slice).
+
+Rules are shape-driven so they apply to every architecture in the zoo:
+
+* 0-d/1-d leaves (norm scales, biases) stay replicated;
+* 2-d+ leaves shard dim 0 over ``data`` and the last dim over ``model``
+  when divisible;
+* scan-stacked leaves (leading super-block axis from the scan partition,
+  path contains ``"scan"``) shift the rule right by one — the block axis is
+  never sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_specs", "param_shardings"]
+
+
+def _is_scan_path(path) -> bool:
+    return any(getattr(p, "key", None) == "scan" for p in path)
+
+
+def _leaf_spec(path, leaf, mesh: Mesh, strategy: str) -> P:
+    if strategy == "flat":
+        return P()
+    dd = mesh.shape.get("data", 1)
+    dm = mesh.shape.get("model", 1)
+    ndim = getattr(leaf, "ndim", 0)
+    off = 1 if _is_scan_path(path) else 0
+    if ndim - off < 2:
+        return P()
+    spec = [None] * ndim
+    if dd > 1 and leaf.shape[off] % dd == 0:
+        spec[off] = "data"
+    if dm > 1 and leaf.shape[ndim - 1] % dm == 0:
+        spec[ndim - 1] = "model"
+    return P(*spec)
+
+
+def param_specs(params: Any, mesh: Mesh, strategy: str = "hier") -> Any:
+    """PartitionSpec pytree for a parameter (or gradient/optimizer) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, l: _leaf_spec(path, l, mesh, strategy), params
+    )
+
+
+def param_shardings(params: Any, mesh: Mesh, strategy: str = "hier") -> Any:
+    """NamedSharding pytree matching :func:`param_specs`."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, strategy)
+    )

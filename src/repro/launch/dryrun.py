@@ -123,7 +123,8 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--strategy", default="hier",
-                    choices=["flat", "hier", "geococo"])
+                    help="registered device_sync strategy (flat/hier/geococo/"
+                         "...); validated against the registry at build time")
     ap.add_argument("--density", type=float, default=0.10)
     ap.add_argument("--microbatches", type=int, default=8)
     ap.add_argument("--all", action="store_true")

@@ -3,12 +3,13 @@
 The pod axis is the WAN-like (DCN) boundary GeoCoCo's communicator owns;
 `data` x `model` is one pod's ICI torus.  Defined as functions (never
 module-level constants) so importing this module touches no jax device
-state.
+state.  Meshes are built through ``repro.dist.compat`` so the same call
+works on the modern axis-typed API and on the 0.4.x toolchain.
 """
 
 from __future__ import annotations
 
-import jax
+from ..dist import compat
 
 __all__ = ["make_production_mesh", "make_small_mesh"]
 
@@ -16,13 +17,9 @@ __all__ = ["make_production_mesh", "make_small_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)
 
 
 def make_small_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
     """Reduced mesh for CPU integration tests (8 host devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat.make_mesh(shape, axes)

@@ -20,7 +20,8 @@ def main():
     ap.add_argument("--mesh", default="2,2,2",
                     help="pod,data,model sizes (product = device count)")
     ap.add_argument("--sync", default="hier",
-                    choices=["flat", "hier", "geococo"])
+                    help="registered device_sync strategy (flat/hier/geococo/"
+                         "...); validated against the registry once jax is up")
     ap.add_argument("--density", type=float, default=0.10)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=128)

@@ -1,11 +1,17 @@
 """Train / serve step builders: model + sync strategy + optimizer, sharded.
 
-The step is built once per (arch, shape, mesh, strategy) cell:
-
-* single-pod mesh — plain ``jax.jit`` with GSPMD (FSDP+TP in-pod).
-* multi-pod mesh — partial-manual ``jax.shard_map`` over the `pod` axis:
-  GSPMD still owns `data`/`model` inside, while the pod boundary runs the
-  GeoCoCo communicator (``repro.dist.collectives``) explicitly.
+The step is built once per (arch, shape, mesh, strategy) cell.  Model
+compute always runs under GSPMD (``jax.jit`` + sharding constraints): FSDP
+over ``data`` and tensor parallelism over ``model`` inside a pod.  The pod
+(WAN-analogue) boundary is owned by the GeoCoCo communicator: the gradient
+exchange runs in a fully-manual ``shard_map`` over the whole mesh, where
+``repro.dist.collectives.sync_gradients`` resolves the configured strategy
+through the two-plane registry.  This split — GSPMD inside the pod, an
+explicit collective program across pods — mirrors the paper's architecture
+(intra-group transfers are cheap and automatic; the inter-group exchange is
+planned) and is also the only layering XLA's CPU partitioner executes
+reliably (partial-auto manual regions CHECK-fail; see
+``repro.dist.compat``).
 
 ``input_specs`` returns ShapeDtypeStruct stand-ins for every model input, so
 the multi-pod dry-run lowers and compiles with zero allocation.
@@ -21,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ModelConfig, ShapeSpec
+from ..dist import compat
 from ..dist.collectives import SyncConfig, sync_gradients
 from ..dist.sharding import param_shardings, param_specs
 from ..models.model import forward, init_cache, init_params
@@ -90,7 +97,7 @@ def abstract_opt_state(cfg: ModelConfig, tcfg: TrainConfig):
 
 
 def abstract_residuals(cfg: ModelConfig, tcfg: TrainConfig):
-    if tcfg.sync.strategy != "geococo":
+    if not tcfg.sync.needs_residuals:
         return None
     params = abstract_params(cfg, tcfg.param_dtype)
     return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, jnp.float32), params)
@@ -168,58 +175,22 @@ def _cache_shardings(cache_tree, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, cache_tree)
 
 
-def _strip_pod(ns: NamedSharding) -> P:
-    """Drop the manual `pod` axis from a spec (for inner GSPMD constraints)."""
-    out = []
-    for part in ns.spec:
-        if part is None:
-            out.append(None)
-            continue
-        parts = part if isinstance(part, tuple) else (part,)
-        kept = tuple(a for a in parts if a != "pod")
-        out.append(kept[0] if len(kept) == 1 else (kept or None))
-    return P(*out)
-
-
-def _under_manual_mesh() -> bool:
-    ctx = jax.sharding.get_abstract_mesh()
-    return ctx is not None and bool(ctx.axis_names)
-
-
-def _inner_constrain(tree, shardings):
-    """Apply GSPMD constraints for auto axes.
-
-    Inside the manual-pod region PartitionSpecs are required (the context
-    mesh supplies the axes); in a plain jit (single-pod) the NamedSharding
-    itself is used — with_sharding_constraint rejects bare specs there."""
-    if _under_manual_mesh():
-        return jax.tree.map(
-            lambda x, ns: jax.lax.with_sharding_constraint(x, _strip_pod(ns)),
-            tree,
-            shardings,
-        )
+def _constrain(tree, shardings):
     return jax.tree.map(
         lambda x, ns: jax.lax.with_sharding_constraint(x, ns), tree, shardings
     )
 
 
-# ---------------------------------------------------------------------------
-# loss
-# ---------------------------------------------------------------------------
-
-
 def _constrain_batch(batch, mesh: Mesh):
-    """Pin the batch dim to the `data` axis inside the manual-pod region
-    (the pod part of the sharding is consumed by shard_map's in_specs)."""
-    if mesh.shape.get("data", 1) <= 1:
-        return batch
+    """Pin the batch dim over the (pod, data) device axes inside the step."""
 
     def one(x):
-        if getattr(x, "ndim", 0) == 0 or x.shape[0] % mesh.shape["data"]:
+        if getattr(x, "ndim", 0) == 0:
             return x
-        spec = P(*(["data"] + [None] * (x.ndim - 1)))
-        if _under_manual_mesh():
-            return jax.lax.with_sharding_constraint(x, spec)
+        axes = _fit_batch_axes(mesh, x.shape[0])
+        if not axes:
+            return x
+        spec = P(axes, *([None] * (x.ndim - 1)))
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
     return jax.tree.map(one, batch)
@@ -232,20 +203,24 @@ def _act_constrain(mesh: Mesh, *, seq_parallel: bool = False):
     conflict by replicating the batch).  ``seq_parallel`` additionally shards
     the sequence dim over `model` (Megatron-style) — measured on this
     container it triggers GSPMD resharding storms under the FSDP weight
-    gathers (data-axis collectives x14, +27% FLOPs; EXPERIMENTS.md §Perf,
-    refuted hypothesis), so it stays off by default.
+    gathers, so it stays off by default.
     """
     dd = mesh.shape.get("data", 1)
     dm = mesh.shape.get("model", 1)
-    if dd <= 1 and dm <= 1:
+    dp = mesh.shape.get("pod", 1)
+    if dd <= 1 and dm <= 1 and dp <= 1:
         return None
+    baxes = [a for a in ("pod", "data") if mesh.shape.get(a, 1) > 1]
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
 
     def ac(x):
         if x.ndim < 2:
             return x
         spec = [None] * x.ndim
-        if dd > 1 and x.shape[0] % dd == 0:
-            spec[0] = "data"
+        if baxes and x.shape[0] % bsize == 0:
+            spec[0] = tuple(baxes)
         if (
             seq_parallel
             and dm > 1
@@ -255,113 +230,82 @@ def _act_constrain(mesh: Mesh, *, seq_parallel: bool = False):
             spec[1] = "model"
         if not any(spec):
             return x
-        pspec = P(*spec)
-        if _under_manual_mesh():
-            return jax.lax.with_sharding_constraint(x, pspec)
-        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*spec))
+        )
 
     return ac
 
 
-def _make_embed_fn(mesh: Mesh):
-    """Explicitly-sharded vocab lookup via a fully-manual nested shard_map.
-
-    XLA's SPMD gather partitioner CHECK-fails on CPU when asked to evaluate
-    sharded-gather strategies under a manual pod axis (spmd_partitioner_util
-    ExpandDeviceGroupsWithIota), so the lookup is expressed manually: the
-    table enters replicated-over-`data` / TP-sharded-over-`model` on d_model,
-    tokens enter batch-sharded over `data`; each device gathers its local
-    (vocab, d/TP) shard.  The transpose rule then inserts the correct psum
-    over `data` for the table gradient automatically.
-    """
-    manual = tuple(a for a in ("data", "model") if mesh.shape.get(a, 1) > 1)
-    if not manual:
-        return None
-    has_d = "data" in manual
-    has_m = "model" in manual
-
-    def embed_fn(embed_params, tokens, dtype):
-        # boundary in f32: the table cotangent psums over `data`, and bf16
-        # all-reduces CHECK-fail in XLA's CPU promotion pass
-        table = embed_params["table"].astype(jnp.float32)
-        tspec = P(None, "model" if has_m and table.shape[1] % mesh.shape["model"] == 0 else None)
-        kspec = P("data" if has_d and tokens.shape[0] % mesh.shape["data"] == 0 else None)
-        ospec = P(kspec[0], None, tspec[1])
-
-        def local(tbl, tok):
-            return tbl.astype(dtype)[tok]
-
-        # inside the manual-pod region the context mesh (with `pod` marked
-        # Manual) must be used; outside it the concrete mesh works
-        ctx = jax.sharding.get_abstract_mesh()
-        use_mesh = ctx if (ctx is not None and ctx.axis_names) else mesh
-        return jax.shard_map(
-            local, mesh=use_mesh,
-            in_specs=(tspec, kspec), out_specs=ospec,
-            axis_names=set(manual), check_vma=False,
-        )(table, tokens)
-
-    return embed_fn
-
-
-def _sharded_xent(mesh: Mesh, logits, labels):
-    """Cross-entropy over vocab-sharded logits via manual collectives.
-
-    The logits arrive (B over data, S, V over model).  Each device computes
-    a local logsumexp contribution and its local slice's label logit; psum
-    over `model` assembles both.  This avoids (a) materializing a full fp32
-    log_softmax and (b) XLA's scatter partitioner in the take_along_axis
-    backward (CHECK-fails on CPU under a manual pod axis).
-    """
-    manual = tuple(a for a in ("data", "model") if mesh.shape.get(a, 1) > 1)
-    dm = mesh.shape.get("model", 1)
-    if not manual or logits.shape[-1] % dm or dm <= 1:
-        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-        return -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0].mean()
-
-    has_d = "data" in manual and logits.shape[0] % mesh.shape["data"] == 0
-    bspec = "data" if has_d else None
-    # per-shard vocab offsets delivered as a model-sharded iota (avoids
-    # axis_index, whose lowering re-binds the outer manual pod axis)
-    offsets = jnp.arange(dm, dtype=jnp.int32) * (logits.shape[-1] // dm)
-
-    def local(lg, lb, off):
-        lg = lg.astype(jnp.float32)
-        vl = lg.shape[-1]
-        lo = off[0]
-        # stability max carries no gradient (logsumexp is shift-invariant);
-        # stop_gradient must wrap the operand — pmax has no JVP rule
-        m = jax.lax.pmax(jax.lax.stop_gradient(jnp.max(lg, axis=-1)), "model")
-        se = jnp.sum(jnp.exp(lg - m[..., None]), axis=-1)
-        lse = jnp.log(jax.lax.psum(se, "model")) + m
-        idx = lb - lo
-        ok = (idx >= 0) & (idx < vl)
-        ll = jnp.take_along_axis(lg, jnp.clip(idx, 0, vl - 1)[..., None], -1)[..., 0]
-        ll = jax.lax.psum(jnp.where(ok, ll, 0.0), "model")
-        loss = (lse - ll).mean()
-        if has_d:
-            loss = jax.lax.pmean(loss, "data")
-        return loss
-
-    ctx_mesh = jax.sharding.get_abstract_mesh()
-    use_mesh = ctx_mesh if (ctx_mesh is not None and ctx_mesh.axis_names) else mesh
-    return jax.shard_map(
-        local, mesh=use_mesh,
-        in_specs=(P(bspec, None, "model"), P(bspec), P("model")),
-        out_specs=P(),
-        axis_names=set(manual), check_vma=False,
-    )(logits, labels, offsets)
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
 
 
 def loss_fn(cfg: ModelConfig, params, batch, compute_dtype=jnp.bfloat16,
-            act_constrain=None, embed_fn=None, mesh: Mesh | None = None):
+            act_constrain=None):
     logits, _ = forward(cfg, params, batch, compute_dtype=compute_dtype,
-                        act_constrain=act_constrain, embed_fn=embed_fn)
+                        act_constrain=act_constrain)
     labels = batch["labels"]
-    if mesh is not None:
-        return _sharded_xent(mesh, logits, labels)
     lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     return -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0].mean()
+
+
+# ---------------------------------------------------------------------------
+# pod-boundary gradient sync (fully-manual shard_map region)
+# ---------------------------------------------------------------------------
+
+
+def _strip_auto_axes(spec: P) -> P:
+    """Drop non-``pod`` mesh axes from a spec.
+
+    Under native partial-auto shard_map (``axis_names={"pod"}`` on modern
+    JAX) the in/out specs may only mention the manual axis — ``data`` /
+    ``model`` sharding stays with GSPMD.  The fully-manual 0.4.x lowering
+    needs the complete specs instead.
+    """
+    out = []
+    for part in spec:
+        if part is None:
+            out.append(None)
+            continue
+        parts = part if isinstance(part, tuple) else (part,)
+        kept = tuple(a for a in parts if a == "pod")
+        out.append(kept[0] if len(kept) == 1 else (kept or None))
+    return P(*out)
+
+
+def _make_pod_sync(mesh: Mesh, tcfg: TrainConfig, p_spec, *, with_residuals: bool):
+    """Wrap ``sync_gradients`` in a shard_map over the pod axis.
+
+    Gradients enter at their parameter partitioning (``p_spec``); each
+    device holds its FSDP/TP shard and exchanges it across the ``pod`` axis
+    under the configured strategy.  Residual state (geococo error feedback)
+    is carried at the same partitioning.  On the 0.4.x toolchain the region
+    is fully manual (complete specs); on a native partial-auto JAX only the
+    pod components survive in the specs.
+    """
+    n_pods = mesh.shape.get("pod", 1)
+    if compat.has_partial_auto():
+        p_spec = jax.tree.map(_strip_auto_axes, p_spec)
+
+    if with_residuals:
+
+        def body(g, r):
+            return sync_gradients(g, r, tcfg.sync, axis="pod", n_pods=n_pods)
+
+        return compat.shard_map(
+            body, mesh,
+            in_specs=(p_spec, p_spec), out_specs=(p_spec, p_spec),
+            axis_names={"pod"},
+        )
+
+    def body(g):
+        return sync_gradients(g, None, tcfg.sync, axis="pod", n_pods=n_pods)[0]
+
+    return compat.shard_map(
+        body, mesh, in_specs=(p_spec,), out_specs=p_spec, axis_names={"pod"},
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -370,14 +314,15 @@ def loss_fn(cfg: ModelConfig, params, batch, compute_dtype=jnp.bfloat16,
 
 
 def build_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    """Returns (jitted_step, shardings dict).
+    """Returns (make_jit, shardings dict).
 
     step(params, opt_state, residuals, batch) ->
         (params', opt_state', residuals', metrics)
     """
     n_pods = mesh.shape.get("pod", 1)
-    p_shard = param_shardings(abstract_params(cfg, tcfg.param_dtype), mesh,
-                              tcfg.sync.strategy)
+    p_abs = abstract_params(cfg, tcfg.param_dtype)
+    p_spec = param_specs(p_abs, mesh, tcfg.sync.strategy)
+    p_shard = param_shardings(p_abs, mesh, tcfg.sync.strategy)
     opt_shard = {
         "m": p_shard,
         "v": p_shard,
@@ -387,21 +332,23 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
     res_shard = p_shard if res_abs is not None else None
 
     ac = _act_constrain(mesh) if tcfg.sync.strategy != "flat" else None
-    emb = _make_embed_fn(mesh)
-    leaf_specs = jax.tree.map(_strip_pod, p_shard)
-
     n_micro = max(1, tcfg.microbatches)
+    pod_sync = (
+        _make_pod_sync(mesh, tcfg, p_spec,
+                       with_residuals=res_abs is not None)
+        if n_pods > 1
+        else None
+    )
 
     def core(params, opt_state, residuals, batch):
         from ..dist import context as dist_context
 
-        params = _inner_constrain(params, p_shard)
+        params = _constrain(params, p_shard)
         with dist_context.distribution(mesh):
             if n_micro == 1:
                 b = _constrain_batch(batch, mesh)
                 loss, grads = jax.value_and_grad(
-                    lambda p: loss_fn(cfg, p, b, tcfg.compute_dtype, ac, emb,
-                                      mesh)
+                    lambda p: loss_fn(cfg, p, b, tcfg.compute_dtype, ac)
                 )(params)
             else:
                 # gradient accumulation: one fwd/bwd per microbatch; only the
@@ -421,8 +368,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
                     gsum, lsum = carry
                     b = _constrain_batch(mbatch, mesh)
                     l, g = jax.value_and_grad(
-                        lambda p: loss_fn(cfg, p, b, tcfg.compute_dtype, ac,
-                                          emb, mesh)
+                        lambda p: loss_fn(cfg, p, b, tcfg.compute_dtype, ac)
                     )(params)
                     gsum = jax.tree.map(
                         lambda a, x: a + x.astype(jnp.float32), gsum, g
@@ -436,36 +382,25 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
                     lambda g, p: (g / n_micro).astype(p.dtype), gsum, params
                 )
                 loss = lsum / n_micro
-        grads, new_res = sync_gradients(
-            grads, residuals, tcfg.sync, axis="pod", n_pods=n_pods,
-            leaf_specs=leaf_specs,
-        )
-        loss = jax.lax.pmean(loss, "pod") if n_pods > 1 else loss
+        new_res = residuals
+        if pod_sync is not None:
+            if res_abs is not None:
+                grads, new_res = pod_sync(grads, residuals)
+            else:
+                grads = pod_sync(grads)
         new_params, new_opt, metrics = adamw_update(
             params, grads, opt_state, tcfg.optim
         )
-        new_params = _inner_constrain(new_params, p_shard)
+        new_params = _constrain(new_params, p_shard)
         metrics = dict(metrics, loss=loss)
         return new_params, new_opt, new_res, metrics
-
-    if n_pods > 1:
-        stepped = jax.shard_map(
-            core,
-            mesh=mesh,
-            in_specs=(P(), P(), P(), P("pod")),
-            out_specs=(P(), P(), P(), P()),
-            axis_names={"pod"},
-            check_vma=False,
-        )
-    else:
-        stepped = core
 
     def make_jit(batch_tree):
         b_shard = _batch_shardings(batch_tree, mesh)
         in_sh = (p_shard, opt_shard, res_shard, b_shard)
         out_sh = (p_shard, opt_shard, res_shard, None)
         return jax.jit(
-            stepped,
+            core,
             in_shardings=in_sh,
             out_shardings=out_sh,
             donate_argnums=(0, 1, 2),
@@ -479,86 +414,53 @@ def build_serve_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig,
                      *, kind: str = "decode"):
     """Prefill: step(params, batch) -> logits.
     Decode: step(params, cache, batch) -> (next_tokens, new_cache)."""
-    p_shard = param_shardings(abstract_params(cfg, tcfg.param_dtype), mesh,
-                              tcfg.sync.strategy)
-    n_pods = mesh.shape.get("pod", 1)
+    p_abs = abstract_params(cfg, tcfg.param_dtype)
+    p_shard = param_shardings(p_abs, mesh, tcfg.sync.strategy)
 
     if kind == "prefill":
         ac = _act_constrain(mesh) if tcfg.sync.strategy != "flat" else None
-        emb = _make_embed_fn(mesh)
 
         def core(params, batch):
             from ..dist import context as dist_context
 
-            params = _inner_constrain(params, p_shard)
+            params = _constrain(params, p_shard)
             batch = _constrain_batch(batch, mesh)
             with dist_context.distribution(mesh):
                 logits, _ = forward(cfg, params, batch,
                                     compute_dtype=tcfg.compute_dtype,
-                                    act_constrain=ac, embed_fn=emb)
+                                    act_constrain=ac)
             return logits
-
-        if n_pods > 1:
-            core_sm = jax.shard_map(
-                core, mesh=mesh,
-                in_specs=(P(), P("pod")), out_specs=P("pod"),
-                axis_names={"pod"}, check_vma=False,
-            )
-        else:
-            core_sm = core
 
         def make_jit(batch_tree):
             b_shard = _batch_shardings(batch_tree, mesh)
-            return jax.jit(core_sm, in_shardings=(p_shard, b_shard))
+            return jax.jit(core, in_shardings=(p_shard, b_shard))
 
         return make_jit, {"params": p_shard}
 
     ac_dec = _act_constrain(mesh) if tcfg.sync.strategy != "flat" else None
-    emb_dec = _make_embed_fn(mesh)
 
     def core(params, cache, batch):
         from ..dist import context as dist_context
 
-        params = _inner_constrain(params, p_shard)
+        params = _constrain(params, p_shard)
         batch = _constrain_batch(batch, mesh)
-        cache = _inner_constrain(cache, _cache_shardings(cache, mesh))
+        cache = _constrain(cache, _cache_shardings(cache, mesh))
         with dist_context.distribution(mesh):
             logits, new_cache = forward(
                 cfg, params, batch, cache=cache,
                 compute_dtype=tcfg.compute_dtype,
-                act_constrain=ac_dec, embed_fn=emb_dec,
+                act_constrain=ac_dec,
             )
         next_tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
         return next_tok.astype(jnp.int32), new_cache
 
     def make_jit(cache_tree, batch_tree):
-        def pod_spec(path, l):
-            off = 1 if _is_scan_path(path) else 0
-            if getattr(l, "ndim", 0) <= off:
-                return P()
-            if l.shape[off] % n_pods:
-                return P()
-            return P(*([None] * off + ["pod"]))
-
-        if n_pods > 1:
-            cache_spec = jax.tree_util.tree_map_with_path(pod_spec, cache_tree)
-            batch_spec = jax.tree_util.tree_map_with_path(pod_spec, batch_tree)
-            gb = next(iter(jax.tree.leaves(batch_tree))).shape[0]
-            tok_spec = P("pod") if gb % n_pods == 0 else P()
-            core_sm = jax.shard_map(
-                core, mesh=mesh,
-                in_specs=(P(), cache_spec, batch_spec),
-                out_specs=(tok_spec, cache_spec),
-                axis_names={"pod"}, check_vma=False,
-            )
-        else:
-            core_sm = core
         c_shard = _cache_shardings(cache_tree, mesh)
         b_shard = _batch_shardings(batch_tree, mesh)
         gb = next(iter(jax.tree.leaves(batch_tree))).shape[0]
         tok_shard = NamedSharding(mesh, P(_fit_batch_axes(mesh, gb) or None))
         return jax.jit(
-            core_sm,
+            core,
             in_shardings=(p_shard, c_shard, b_shard),
             out_shardings=(tok_shard, c_shard),
             donate_argnums=(1,),

@@ -113,7 +113,7 @@ class Trainer:
         self.opt_state = adamw_init(self.params, tcfg.optim)
         self.residuals = (
             jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), self.params)
-            if tcfg.sync.strategy == "geococo"
+            if tcfg.sync.needs_residuals
             else None
         )
         self.step_idx = 0

@@ -228,6 +228,9 @@ def test_rglru_matches_associative_scan_in_model():
 
 
 def test_wkv6_chunked_property_sweep():
+    pytest.importorskip(
+        "hypothesis", reason="dev-only dependency; see requirements-dev.txt"
+    )
     import hypothesis.strategies as st
     from hypothesis import given, settings
 

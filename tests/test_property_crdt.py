@@ -18,6 +18,10 @@ permutation pi and any multiplicity vector k,
 
 import hashlib
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; see requirements-dev.txt")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

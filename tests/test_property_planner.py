@@ -1,7 +1,11 @@
 """Hypothesis property tests for the Planner/Communicator invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; see requirements-dev.txt")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.latency import one_relay_effective, all_pairs_shortest

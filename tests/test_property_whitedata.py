@@ -7,6 +7,10 @@ batch (given global validation semantics), plus soundness of intra-group
 abort detection and the round-trip byte accounting.
 """
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; see requirements-dev.txt")
+
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -1,0 +1,288 @@
+"""Two-plane strategy registry + device-plane API coverage.
+
+Covers the unified strategy surface: registry round-trips, EngineConfig's
+named-strategy/boolean shims, GeoCluster resolving implementations through
+the registry, SyncConfig validation, the analytic byte estimator against
+bytes actually moved on the 8-host-device mesh, and the task-preservation
+property of the filtered exchange.
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+from repro.core import strategies
+from repro.core.replication import EngineConfig, GeoCluster, RunStats
+from repro.core.whitedata import no_filter
+
+
+# ---------------------------------------------------------------------------
+# registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_round_trip():
+    marker = object()
+    strategies.register("test_kind", "thing", marker)
+    assert strategies.get("test_kind", "thing") is marker
+    assert "thing" in strategies.names("test_kind")
+    assert "test_kind" in strategies.kinds()
+
+
+def test_registry_unknown_name_lists_known():
+    with pytest.raises(KeyError, match="milp"):
+        strategies.get("planner", "definitely-not-registered")
+
+
+def test_core_strategies_registered():
+    assert {"milp", "kcenter", "agglomerative", "kmeans", "random", "none"} \
+        <= set(strategies.names("planner"))
+    assert {"all_to_all", "hierarchical", "leader"} \
+        <= set(strategies.names("schedule"))
+    assert {"whitedata", "none"} <= set(strategies.names("filter"))
+
+
+def test_two_planes_share_strategy_names():
+    """flat / hier / geococo mean the same thing to both planes."""
+    import repro.dist.collectives  # noqa: F401  (registers device_sync)
+
+    shared = {"flat", "hier", "geococo"}
+    assert shared <= set(strategies.names("device_sync"))
+    assert shared <= set(strategies.names("wan_sync"))
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: named strategies + boolean back-compat shims
+# ---------------------------------------------------------------------------
+
+
+def test_engineconfig_named_strategy_drives_stages():
+    flat = EngineConfig(n_nodes=5, sync_strategy="flat")
+    assert not flat.grouping and not flat.filtering and not flat.tiv
+    assert flat.resolved_schedule_name == "all_to_all"
+    assert flat.resolved_filter_name == "none"
+
+    geo = EngineConfig(n_nodes=5, sync_strategy="geococo")
+    assert geo.grouping and geo.filtering and geo.tiv and not geo.compression
+    assert geo.resolved_schedule_name == "hierarchical"
+    assert geo.resolved_filter_name == "whitedata"
+
+    zl = EngineConfig(n_nodes=5, sync_strategy="geococo-zlib")
+    assert zl.compression
+
+
+def test_engineconfig_boolean_shim_derives_name():
+    assert EngineConfig(n_nodes=4, grouping=False).resolved_sync_strategy == "flat"
+    # faithful naming: the 'hier' preset has tiv=False, so a boolean config
+    # with the relay stage on gets the +tiv modifier, never a wrong preset
+    hier = EngineConfig(n_nodes=4, grouping=True, filtering=False)
+    assert hier.resolved_sync_strategy == "hier+tiv"
+    assert hier.resolved_filter_name == "none"
+    no_tiv = EngineConfig(n_nodes=4, grouping=True, filtering=False, tiv=False)
+    assert no_tiv.resolved_sync_strategy == "hier"
+    assert EngineConfig(n_nodes=4).resolved_sync_strategy == "geococo"
+    assert EngineConfig(n_nodes=4, tiv=False).resolved_sync_strategy == "geococo-tiv"
+    # modified names are not registered presets: round-tripping fails loudly
+    with pytest.raises(KeyError):
+        EngineConfig(n_nodes=4, sync_strategy="hier+tiv")
+
+
+def test_geocluster_rejects_schedule_without_grouping():
+    cfg = EngineConfig(n_nodes=4, grouping=False, schedule_name="leader")
+    with pytest.raises(ValueError, match="grouping=True"):
+        GeoCluster(cfg)
+
+
+def test_engineconfig_replace_respects_boolean_ablation():
+    """dataclasses.replace on the stage booleans must not be silently
+    reverted by a derived strategy name (ablation-sweep regression)."""
+    import dataclasses
+
+    base = EngineConfig(n_nodes=4)
+    ablated = dataclasses.replace(base, filtering=False)
+    assert not ablated.filtering
+    assert ablated.resolved_sync_strategy == "hier+tiv"  # default tiv stays on
+    assert ablated.resolved_filter_name == "none"
+
+
+def test_geocluster_rejects_incompatible_schedule_early():
+    """A registered builder that can't drive the grouping engine fails at
+    construction, not mid-run."""
+    cfg = EngineConfig(n_nodes=4, schedule_name="leader")
+    with pytest.raises(ValueError, match="grouping engine"):
+        GeoCluster(cfg)
+
+
+def test_engineconfig_rejects_unknown_names():
+    with pytest.raises(KeyError):
+        EngineConfig(n_nodes=4, sync_strategy="warp-drive")
+    with pytest.raises(KeyError):
+        EngineConfig(n_nodes=4, planner="warp-drive")
+    with pytest.raises(KeyError):
+        EngineConfig(n_nodes=4, filter_name="warp-drive")
+
+
+def test_geocluster_resolves_filter_via_registry():
+    """A custom registered filter is picked up without touching the engine."""
+    calls = {"n": 0}
+
+    def counting_filter(txns, snapshot):
+        calls["n"] += 1
+        return no_filter(txns, snapshot)
+
+    strategies.register("filter", "counting", counting_filter)
+    from repro.core.workload import YCSBConfig, YCSBGenerator
+
+    n = 4
+    lat = np.full((n, n), 10.0)
+    np.fill_diagonal(lat, 0.0)
+    cfg = EngineConfig(n_nodes=n, planner="kcenter", filter_name="counting")
+    eng = GeoCluster(cfg, seed=0)
+    gen = YCSBGenerator(YCSBConfig(n_keys=50, value_bytes=16), n, seed=1)
+    stats = eng.run(gen, [lat] * 3, txns_per_node=3)
+    assert calls["n"] > 0
+    assert stats.committed > 0
+
+
+# ---------------------------------------------------------------------------
+# RunStats empty-run regression (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_runstats_empty_run_does_not_raise():
+    rs = RunStats(epochs=[], msg_matrix=np.zeros((2, 2), dtype=int),
+                  plan_time_s=0.0, state_digest="", value_digest="")
+    assert rs.p99_sync_ms == 0.0
+    assert rs.makespans_ms.shape == (0,)
+    assert rs.throughput_tps == 0.0
+    assert rs.committed == 0 and rs.total_txns == 0
+    assert rs.white_stats.total_updates == 0
+
+
+# ---------------------------------------------------------------------------
+# SyncConfig validation
+# ---------------------------------------------------------------------------
+
+
+def test_syncconfig_rejects_invalid_values():
+    from repro.dist.collectives import SyncConfig
+
+    with pytest.raises(ValueError, match="registered"):
+        SyncConfig(strategy="warp-drive")
+    with pytest.raises(ValueError, match="density"):
+        SyncConfig(strategy="geococo", density=0.0)
+    with pytest.raises(ValueError, match="density"):
+        SyncConfig(strategy="geococo", density=1.5)
+    with pytest.raises(ValueError, match="chunk"):
+        SyncConfig(chunk=0)
+    with pytest.raises(ValueError, match="min_leaf_size"):
+        SyncConfig(min_leaf_size=-1)
+
+
+def test_syncconfig_residual_requirements_come_from_registry():
+    from repro.dist.collectives import SyncConfig
+
+    assert SyncConfig(strategy="geococo").needs_residuals
+    assert not SyncConfig(strategy="hier").needs_residuals
+    assert not SyncConfig(strategy="flat").needs_residuals
+
+
+# ---------------------------------------------------------------------------
+# device plane: estimator vs bytes actually moved; task preservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    import jax
+
+    from repro.launch.mesh import make_small_mesh
+
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices")
+    return make_small_mesh()
+
+
+def test_estimate_matches_bytes_actually_moved(mesh):
+    """The analytic wire model and a real exchange agree value-for-value."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import SyncConfig, estimate_sync_bytes, sync_gradients
+
+    cfg = SyncConfig(strategy="geococo", density=0.25, chunk=64,
+                     min_leaf_size=64)
+    rng = np.random.default_rng(3)
+    tree = {
+        "big": jnp.asarray(rng.normal(size=(4, 256)), jnp.float32),   # filtered
+        "small": jnp.asarray(rng.normal(size=(8,)), jnp.float32),     # dense
+    }
+    res = jax.tree.map(lambda l: jnp.zeros_like(l), tree)
+
+    def body(big, small):
+        g = {"big": big * (1.0 + jax.lax.axis_index("pod").astype(jnp.float32)),
+             "small": small}
+        r = {"big": jnp.zeros_like(big), "small": jnp.zeros_like(small)}
+        synced, new_r = sync_gradients(g, r, cfg, n_pods=2)
+        # what this pod actually put on the wire, per leaf
+        sent_big = (g["big"] + r["big"]) - new_r["big"]
+        return synced["big"], sent_big
+
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        axis_names={"pod"}, check_vma=False,
+    ))
+    _, sent_big = f(tree["big"], tree["small"])
+
+    # measured wire content: nonzero filtered values + dense small leaf
+    sparse_vals = int((np.asarray(sent_big) != 0.0).sum())
+    dense_vals = tree["small"].size
+    ring = 2.0 * (2 - 1) / 2
+    measured_bytes = ring * (sparse_vals * (4 + 4) + dense_vals * 4)
+
+    est = estimate_sync_bytes(tree, cfg, n_pods=2)
+    assert est == pytest.approx(measured_bytes, rel=1e-6)
+    # sanity: the filtered leaf kept exactly density * size values
+    assert sparse_vals == int(0.25 * tree["big"].size)
+
+
+def test_chunked_topk_preserves_topk_mass(mesh):
+    """Task preservation: what crosses the wire is exactly the top-k mass,
+    and nothing is lost — sent + residual reconstructs the accumulator."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist.collectives import chunked_topk_exchange
+
+    rng = np.random.default_rng(4)
+    g = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    r = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+    chunk, density = 64, 0.125
+
+    def body(g, r):
+        out, new_r = chunked_topk_exchange(
+            g, r, axis="pod", density=density, chunk=chunk
+        )
+        return out, new_r
+
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
+        axis_names={"pod"}, check_vma=False,
+    ))
+    _, new_r = f(g, r)
+
+    acc = np.asarray(g) + np.asarray(r)
+    sent = acc - np.asarray(new_r)
+    # exact reconstruction: no mass is created or destroyed
+    np.testing.assert_allclose(sent + np.asarray(new_r), acc, rtol=1e-6)
+    k = int(round(density * chunk))
+    for row in range(acc.shape[0]):
+        s, res = np.abs(sent[row]), np.abs(acc[row] - sent[row])
+        assert (s > 0).sum() == k
+        # every transmitted value dominates every retained one: top-k mass
+        assert s[s > 0].min() >= res[res > 0].max() - 1e-6
