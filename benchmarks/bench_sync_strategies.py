@@ -10,7 +10,12 @@ Three views of the same strategy surface:
   accounting must reproduce the device-plane reduction factors (the two
   planes share one wire model through the strategy registry);
 * **measured** — dry-run artifacts (results/dryrun/*.json), when present,
-  report the per-axis collective link bytes XLA actually emits.
+  report the per-axis collective link bytes XLA actually emits;
+* **control-plane** — the relay ring ``relay_psum`` would run is computed
+  from a *monitor-estimated* inter-pod latency matrix (a ``repro.control``
+  NetworkView), and compared against the ground-truth ring: estimate-vs-
+  truth relay-order agreement plus the bottleneck-latency cost of planning
+  from estimates.
 """
 
 from __future__ import annotations
@@ -22,6 +27,8 @@ import os
 import numpy as np
 
 from repro.configs.registry import get_config
+from repro.control import MonitorView, TraceView
+from repro.core.latency import aws_latency_matrix, jitter_trace
 from repro.core.planner import no_grouping
 from repro.core.schedule import all_to_all_schedule, hierarchical_schedule
 from repro.dist.collectives import SyncConfig, estimate_sync_bytes
@@ -31,6 +38,7 @@ from .common import check
 
 N_PODS = 2
 DENSITY = 0.10
+RING_PODS = 4  # the relay-ring section models a 4-pod deployment
 
 
 def _wan_plane_bytes(shard_bytes: float, *, filtered: float | None) -> float:
@@ -52,7 +60,38 @@ def _wan_plane_bytes(shard_bytes: float, *, filtered: float | None) -> float:
     return sched.total_bytes
 
 
-def run(quick: bool = True) -> dict:
+def _relay_ring_from_view(quick: bool, view_factory) -> dict:
+    """Estimate-vs-truth relay order for the device plane's pod ring.
+
+    The inter-pod WAN is the first ``RING_PODS`` AWS-style regions under
+    jitter; the ring order fed to ``relay_psum`` comes from the view's
+    *estimated* matrices (the trainer's ControlPlane path), evaluated
+    against the rings a ground-truth oracle would pick.  ``view_factory``
+    receives the generated trace so the view always observes the same
+    ground truth it is scored against.
+    """
+    from benchmarks.bench_tiv import relay_order_agreement
+
+    rounds = 20 if quick else 80
+    base = aws_latency_matrix()[:RING_PODS, :RING_PODS]
+    trace = jitter_trace(base, rounds, np.random.default_rng(11))
+    if view_factory is None:
+        view_factory = lambda tr: MonitorView(  # noqa: E731
+            TraceView(tr), noise=0.10, rng=np.random.default_rng(12)
+        )
+    view = view_factory(trace)
+    if view.n != RING_PODS:
+        raise ValueError(
+            f"view_factory built a {view.n}-node view for the "
+            f"{RING_PODS}-pod trace it was given"
+        )
+    return relay_order_agreement(trace, view, rounds=rounds)
+
+
+def run(quick: bool = True, view_factory=None) -> dict:
+    """``view_factory(trace) -> NetworkView`` optionally supplies the view
+    for the relay-ring section (default: full-mesh EWMA monitoring of the
+    given trace with 10% probe noise) — same shape as bench_tiv's."""
     # analytic model (per device, per step, inter-pod)
     analytic = {}
     for arch in ("minitron-8b", "deepseek-coder-33b", "deepseek-v3-671b"):
@@ -95,6 +134,12 @@ def run(quick: bool = True) -> dict:
           f"WAN-schedule geo/hier={wan_ratio:.3f}  "
           f"(dense {wan_dense/1e9:.2f} GB -> filtered {wan_filtered/1e9:.2f} GB)")
 
+    # control-plane: relay_psum ring order from monitor-estimated matrices
+    ring = _relay_ring_from_view(quick, view_factory)
+    print(f"  relay ring from NetworkView: edge agreement "
+          f"{ring['edge_agreement']:.1%}, bottleneck cost ratio "
+          f"{ring['cost_ratio']:.3f}, probes {ring['probe_bytes']/1e3:.1f} KB")
+
     # measured from dry-run artifacts, if present
     measured = {}
     for path in sorted(glob.glob("results/dryrun/*__multi__*.json")):
@@ -119,9 +164,15 @@ def run(quick: bool = True) -> dict:
               "Two-plane consistency: WAN schedule + first-principles filter "
               "payload reproduce the device-plane byte reduction",
               f"device={device_ratio:.4f} wan={wan_ratio:.4f}"),
+        check(ring["cost_ratio"] < 1.15,
+              "Control: relay rings planned from monitor estimates stay "
+              "within 15% of ground-truth bottleneck latency",
+              f"cost_ratio={ring['cost_ratio']:.3f} "
+              f"agreement={ring['edge_agreement']:.1%}"),
     ]
     return {"figure": "sync-strategies", "analytic": analytic,
-            "two_plane": two_plane, "measured": measured, "checks": checks}
+            "two_plane": two_plane, "relay_ring": ring,
+            "measured": measured, "checks": checks}
 
 
 if __name__ == "__main__":

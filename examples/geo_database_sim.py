@@ -67,18 +67,21 @@ def main():
                    hot_write_frac=0.3, hot_locality=True),
         n, seed=5, node_region=regions,
     )
-    # run half, fail the current aggregator of group 0, run the rest
+    # run half, fail the current aggregator of group 0, run the rest;
+    # the failure flows through the network control plane as a typed
+    # PlanChanged event every subscriber (any plane) observes
     half = epochs // 2
     rs1 = eng.run(gen, trace, txns_per_node=12, n_epochs=half)
-    plan = eng._replanner.plan
+    plan = eng.control.plan
     victim = plan.aggregators[0]
-    eng._replanner.on_node_failure(victim)
+    eng.control.on_node_failure(victim)
     print(f"  injected failure of aggregator node {victim} at epoch {half}; "
           "members fall back + replan next round")
     rs2 = eng.run(gen, trace, txns_per_node=12, n_epochs=half)
     print(f"  committed {rs1.committed}+{rs2.committed} txns; "
           f"white-data filtered {rs2.white_stats.white_byte_ratio:.0%} of bytes; "
-          f"replans: {eng._replanner.replan_count}")
+          f"replans: {eng.control.replan_count}; "
+          f"control events: {eng.control.event_counts()}")
     print("  run completed with consistent state "
           f"(digest {eng.store.digest()[:12]}...)")
 

@@ -1,0 +1,45 @@
+"""``repro.control`` — the network control plane feeding both sync planes.
+
+The paper's claim is that *adapting* grouping and relay routing to real-time
+network conditions (Sec 4.2 delay monitoring, re-group damping, TIV relays)
+is what unlocks the WAN-cost reduction.  This package is that adaptation
+layer as one event-driven API:
+
+* :class:`~repro.control.network.NetworkView` — one ``sample()/estimate()``
+  interface over ground-truth traces (:class:`TraceView`), full-mesh EWMA
+  probing (:class:`MonitorView`) and Vivaldi coordinates
+  (:class:`VivaldiView`), with probe-cost accounting;
+* :class:`~repro.control.plane.ControlPlane` — owns the damped
+  :class:`~repro.core.planner.Replanner` and the TIV relay-order search,
+  and emits typed :class:`~repro.control.events.NetworkEvent`\\ s;
+* both planes subscribe: ``GeoCluster`` (WAN write sets) reacts to
+  :class:`PlanChanged`, ``Trainer`` (device-plane gradients) reacts to
+  :class:`RelayOrderChanged` through each ``device_sync`` strategy's
+  declared reaction in the shared registry.
+"""
+
+from .events import (
+    LinkDegraded,
+    LinkRecovered,
+    NetworkEvent,
+    PlanChanged,
+    RelayOrderChanged,
+)
+from .network import MonitorView, NetworkView, TraceView, VivaldiView, as_view
+from .plane import ControlPlane, relay_ring_order, ring_cost
+
+__all__ = [
+    "NetworkEvent",
+    "LinkDegraded",
+    "LinkRecovered",
+    "PlanChanged",
+    "RelayOrderChanged",
+    "NetworkView",
+    "TraceView",
+    "MonitorView",
+    "VivaldiView",
+    "as_view",
+    "ControlPlane",
+    "relay_ring_order",
+    "ring_cost",
+]

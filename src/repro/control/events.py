@@ -1,0 +1,88 @@
+"""Typed network-control events (paper Sec 4.2 "Delay Monitoring" + damping).
+
+The :class:`~repro.control.plane.ControlPlane` turns raw latency samples into
+a small vocabulary of events that *both* synchronization planes consume:
+
+* :class:`LinkDegraded` / :class:`LinkRecovered` — a single link's sustained
+  departure from (return to) its EWMA baseline.  Transient RTT noise never
+  fires these: the detector requires ``sustain`` consecutive over-threshold
+  samples, the same damping policy as the replanner.
+* :class:`PlanChanged` — the damped Replanner produced a new
+  :class:`~repro.core.planner.GroupPlan` (sustained deviation, node failure,
+  or a forced replan from e.g. the trainer's straggler signal).
+* :class:`RelayOrderChanged` — the TIV relay-order search produced a new
+  relay ring; the device plane maps this onto ``relay_psum``'s ``order``.
+
+Events are frozen dataclasses: subscribers may hold them, compare them, and
+(in tests) assert both planes received the *same instance* from one
+ControlPlane.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.planner import GroupPlan
+
+__all__ = [
+    "NetworkEvent",
+    "LinkDegraded",
+    "LinkRecovered",
+    "PlanChanged",
+    "RelayOrderChanged",
+]
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class NetworkEvent:
+    """Base class for all control-plane events.
+
+    ``round`` is the ControlPlane's observation counter at emission time;
+    ``reason`` carries the trigger ("sustained-deviation", "node-failure",
+    "straggler@step12", ...).
+    """
+
+    round: int
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class LinkDegraded(NetworkEvent):
+    """Link (i, j) exceeded ``degrade_factor`` x its EWMA baseline for
+    ``degrade_sustain`` consecutive samples."""
+
+    i: int
+    j: int
+    baseline_ms: float
+    observed_ms: float
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class LinkRecovered(NetworkEvent):
+    """A previously-degraded link returned under ``recover_factor`` x its
+    baseline for ``degrade_sustain`` consecutive samples."""
+
+    i: int
+    j: int
+    baseline_ms: float
+    observed_ms: float
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class PlanChanged(NetworkEvent):
+    """The damped Replanner installed a new grouping plan."""
+
+    plan: GroupPlan
+    previous: GroupPlan | None = None
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class RelayOrderChanged(NetworkEvent):
+    """The TIV relay-order search produced a new relay ring.
+
+    ``order`` is canonical (rotation/reflection-normalized), so two
+    equivalent rings never produce a spurious event.
+    """
+
+    order: tuple[int, ...]
+    previous: tuple[int, ...] | None = None

@@ -48,6 +48,12 @@ class LatencyMonitor:
         self.probe_count += self.n * (self.n - 1)
         return self.est
 
+    def estimate(self) -> np.ndarray:
+        """Current EWMA estimate (no probes) — the same accessor contract as
+        :meth:`VivaldiSystem.estimate`, so ``repro.control`` views treat
+        both regimes uniformly."""
+        return self.est.copy()
+
     @property
     def probe_bytes(self) -> int:
         return self.probe_count * PROBE_BYTES

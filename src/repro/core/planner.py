@@ -596,6 +596,15 @@ class Replanner:
     latency matrix from the matrix used at planning time exceeds
     ``threshold`` (default 20%) for at least ``sustain`` consecutive
     observations — transient RTT noise is suppressed.
+
+    **Force contract**: a forced replan request without a latency matrix
+    (:meth:`force` with no argument, or :meth:`on_node_failure`) only sets a
+    flag — the replan happens at the *next* :meth:`observe`, because there
+    is nothing to plan against until a matrix arrives.  Event-driven callers
+    that need the plan to react *immediately* (e.g.
+    ``repro.control.ControlPlane.force_replan`` on a sustained-deviation or
+    straggler signal) pass the last observed matrix to :meth:`force`, which
+    replans before returning.
     """
 
     def __init__(
@@ -605,7 +614,7 @@ class Replanner:
         threshold: float = 0.20,
         sustain: int = 3,
     ):
-        self._plan_fn = plan_fn
+        self.plan_fn = plan_fn
         self.threshold = threshold
         self.sustain = sustain
         self._plan: GroupPlan | None = None
@@ -638,18 +647,31 @@ class Replanner:
         return self._plan
 
     def _replan(self, lat: np.ndarray) -> GroupPlan:
-        self._plan = self._plan_fn(lat)
+        self._plan = self.plan_fn(lat)
         self._plan_lat = lat.copy()
         self._over = 0
         self._force = False
         self.replan_count += 1
         return self._plan
 
+    def force(self, lat: np.ndarray | None = None) -> GroupPlan | None:
+        """Request a replan.
+
+        With ``lat`` the replan happens **immediately** and the new plan is
+        returned; without it only a flag is set and the replan fires at the
+        next :meth:`observe` (see the class docstring's force contract).
+        """
+        if lat is not None:
+            return self._replan(lat)
+        self._force = True
+        return None
+
     def on_node_failure(self, node: int) -> GroupPlan | None:
         """Aggregator/member failover (Sec 4.4): drop the node immediately;
-        the full replan happens at the next observation."""
+        the full replan happens at the next observation (the no-matrix arm
+        of the force contract)."""
         if self._plan is None:
             return None
         self._plan = self._plan.drop_node(node)
-        self._force = True  # force replan at next observe()
+        self.force()  # full regroup at next observe()
         return self._plan

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 import zlib as _zlib
 from typing import Callable, Sequence
 
@@ -205,6 +206,7 @@ class GeoCluster:
         self,
         cfg: EngineConfig,
         *,
+        control=None,
         bandwidth_mbps: np.ndarray | float = np.inf,
         loss: np.ndarray | float = 0.0,
         wan_mask: np.ndarray | None = None,
@@ -214,7 +216,15 @@ class GeoCluster:
         per-epoch ``wan_bytes`` counts only those links — matching the
         paper's NIC-level inter-region egress measurement (Sec 6.1).  Cheap
         intra-region LAN traffic (the gather/scatter phases) is excluded,
-        exactly as in the paper's bandwidth-utilization methodology."""
+        exactly as in the paper's bandwidth-utilization methodology.
+
+        ``control`` is a ``repro.control.ControlPlane``; the engine no
+        longer constructs a private Replanner — it pushes each epoch's
+        latency matrix through the plane and takes the (damped) plan back,
+        so every other subscriber (e.g. a device-plane Trainer sharing the
+        instance) observes the same ``PlanChanged`` events.  When omitted,
+        the engine builds its own plane from the config's replan
+        parameters."""
         self.cfg = cfg
         self.bandwidth = bandwidth_mbps
         self.loss = loss
@@ -247,35 +257,63 @@ class GeoCluster:
                 f"schedule {cfg.schedule_name!r} requires grouping=True "
                 "(the flat engine always runs 'all_to_all')"
             )
-        self._replanner = self._make_replanner()
         self.plan_time_s = 0.0
+        self._payload_ewma = 0.0   # observed per-node epoch payload (bytes)
+        self._keep_ewma = 1.0      # observed post-filter keep ratio
+        self.control = self._wire_control(control)
         self.msg_matrix = np.zeros((cfg.n_nodes, cfg.n_nodes), dtype=int)
 
-    def _make_replanner(self) -> Replanner:
+    def _wire_control(self, control):
+        """Attach to (or build) the network control plane.
+
+        The engine contributes its bandwidth/payload-aware plan ranking to
+        the plane — but only when no better-informed planner is already
+        bound (``bind_planner`` keeps the first non-default planner on a
+        shared instance)."""
+        from ..control.plane import ControlPlane
+
+        cfg = self.cfg
+        if control is None:
+            control = ControlPlane(
+                replan_threshold=cfg.replan_threshold,
+                replan_sustain=cfg.replan_sustain,
+                tiv=cfg.tiv,
+                tiv_margin=cfg.tiv_margin,
+            )
+        control.bind_planner(self._plan_fn)
+        return control
+
+    def _plan_fn(self, lat: np.ndarray) -> GroupPlan:
+        """Bandwidth/payload-aware plan ranking (Sec 4.1 "balance latency
+        and resource utilization"), fed by per-epoch payload observations."""
         from .planner import best_plan
 
         cfg = self.cfg
-        self._payload_ewma = 0.0   # observed per-node epoch payload (bytes)
-        self._keep_ewma = 1.0      # observed post-filter keep ratio
-
-        def plan_fn(lat: np.ndarray) -> GroupPlan:
-            t0 = time.perf_counter()
-            plan = best_plan(
-                lat,
-                tiv=cfg.tiv,
-                tiv_margin=cfg.tiv_margin,
-                method=cfg.planner,
-                time_limit_s=cfg.planner_time_limit_s,
-                payload_bytes=self._payload_ewma or None,
-                bandwidth_mbps=self.bandwidth,
-                filter_keep=self._keep_ewma if cfg.filtering else 1.0,
-            )
-            self.plan_time_s += time.perf_counter() - t0
-            return plan
-
-        return Replanner(
-            plan_fn, threshold=cfg.replan_threshold, sustain=cfg.replan_sustain
+        t0 = time.perf_counter()
+        plan = best_plan(
+            lat,
+            tiv=cfg.tiv,
+            tiv_margin=cfg.tiv_margin,
+            method=cfg.planner,
+            time_limit_s=cfg.planner_time_limit_s,
+            payload_bytes=self._payload_ewma or None,
+            bandwidth_mbps=self.bandwidth,
+            filter_keep=self._keep_ewma if cfg.filtering else 1.0,
         )
+        self.plan_time_s += time.perf_counter() - t0
+        return plan
+
+    @property
+    def _replanner(self) -> Replanner:
+        """Deprecated: the engine no longer owns a private Replanner."""
+        warnings.warn(
+            "GeoCluster._replanner is deprecated; use GeoCluster.control "
+            "(a repro.control.ControlPlane) — e.g. control.plan, "
+            "control.replan_count, control.on_node_failure()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.control.replanner
 
     # -- one epoch -------------------------------------------------------------
 
@@ -313,7 +351,7 @@ class GeoCluster:
                 if self._payload_ewma
                 else mean_payload
             )
-            plan = self._replanner.observe(lat)
+            plan = self.control.observe(lat)
             # Validation metadata (read/write sets) always flows globally, as
             # in GeoGauss; filtering strips white-data *payloads* only.  The
             # commit outcome is therefore bit-identical to the baseline.

@@ -72,11 +72,20 @@ class DeviceSyncStrategy:
     comparable.  ``shard_factor`` is how many in-pod devices a leaf is
     split across: the filter's ``min_leaf_size`` / chunking decisions
     happen on the shard each device actually holds.
+
+    ``react(cfg, event)`` declares how the strategy responds to a
+    ``repro.control`` :class:`~repro.control.events.NetworkEvent`: it
+    returns an updated :class:`SyncConfig` (the trainer then rebuilds its
+    step) or ``None`` for "no reaction".  ``flat`` ignores the network
+    (replicated all-to-all has no ring to re-route); ``hier`` and
+    ``geococo`` adopt the control plane's relay ring on
+    :class:`~repro.control.events.RelayOrderChanged`.
     """
 
     name: str
     needs_residuals: bool
     wire_values: Callable[[float, "SyncConfig", float], tuple[float, float]]
+    react: Callable[["SyncConfig", Any], "SyncConfig | None"] | None = None
 
 
 def _dense_wire(n: float, cfg: "SyncConfig", shard_factor: float = 1.0):
@@ -92,17 +101,30 @@ def _topk_wire(n: float, cfg: "SyncConfig", shard_factor: float = 1.0):
     return 0.0, float(n_chunks * min(k, cfg.chunk) * max(shard_factor, 1.0))
 
 
+def _react_relay_order(cfg: "SyncConfig", event: Any) -> "SyncConfig | None":
+    """Ring-bearing strategies adopt the control plane's new relay order."""
+    from ..control.events import RelayOrderChanged
+
+    if isinstance(event, RelayOrderChanged):
+        order = tuple(int(i) for i in event.order)
+        if order != cfg.ring_order:
+            return dataclasses.replace(cfg, ring_order=order)
+    return None
+
+
 strategies.register(
     "device_sync", "flat",
     DeviceSyncStrategy("flat", needs_residuals=False, wire_values=_dense_wire),
 )
 strategies.register(
     "device_sync", "hier",
-    DeviceSyncStrategy("hier", needs_residuals=False, wire_values=_dense_wire),
+    DeviceSyncStrategy("hier", needs_residuals=False, wire_values=_dense_wire,
+                       react=_react_relay_order),
 )
 strategies.register(
     "device_sync", "geococo",
-    DeviceSyncStrategy("geococo", needs_residuals=True, wire_values=_topk_wire),
+    DeviceSyncStrategy("geococo", needs_residuals=True, wire_values=_topk_wire,
+                       react=_react_relay_order),
 )
 
 
@@ -115,12 +137,19 @@ class SyncConfig:
     top-k selection granularity; ``min_leaf_size`` the element count below
     which a leaf skips filtering (norm scales and biases are cheap and
     high-impact — always sent densely, a task-preservation choice).
+
+    ``ring_order`` is the pod relay ring for the exchange — the device-plane
+    image of the WAN plane's TIV relay paths, normally fed by
+    ``repro.control.ControlPlane`` from *measured* inter-pod latency (a
+    :class:`RelayOrderChanged` event through the strategy's ``react``).
+    ``None`` keeps the pmean default (ring order left to XLA).
     """
 
     strategy: str = "hier"
     density: float = 0.10
     chunk: int = 2048
     min_leaf_size: int = 4096
+    ring_order: tuple[int, ...] | None = None
 
     def __post_init__(self):
         known = strategies.names("device_sync")
@@ -136,6 +165,14 @@ class SyncConfig:
             raise ValueError(
                 f"min_leaf_size must be >= 0, got {self.min_leaf_size}"
             )
+        if self.ring_order is not None:
+            order = tuple(int(i) for i in self.ring_order)
+            if sorted(order) != list(range(len(order))):
+                raise ValueError(
+                    f"ring_order must be a permutation of 0..n_pods-1, "
+                    f"got {self.ring_order}"
+                )
+            object.__setattr__(self, "ring_order", order)
 
     @property
     def spec(self) -> DeviceSyncStrategy:
@@ -176,6 +213,14 @@ def relay_psum(x: jnp.ndarray, axis: str = "pod", *, order=None) -> jnp.ndarray:
     return acc
 
 
+def _pod_mean(x: jnp.ndarray, axis: str, n_pods: int, order) -> jnp.ndarray:
+    """Mean over pods — through the explicit relay ring when an order is
+    set (measured-latency routing), else the stock ``pmean``."""
+    if order is None:
+        return jax.lax.pmean(x, axis)
+    return relay_psum(x, axis, order=order) / n_pods
+
+
 def _topk_mask(m: jnp.ndarray, k: int) -> jnp.ndarray:
     """Per-row mask selecting the ``k`` largest-|.| entries of ``m``."""
     rows, chunk = m.shape
@@ -193,6 +238,7 @@ def chunked_topk_exchange(
     axis: str = "pod",
     density: float = 0.10,
     chunk: int = 2048,
+    order: tuple[int, ...] | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Density-based top-k gradient exchange with error feedback.
 
@@ -202,7 +248,9 @@ def chunked_topk_exchange(
     residual and is *carried to the next step* (error feedback), so no task
     signal is dropped — only deferred.  Returns ``(pmean_of_sent,
     new_residual)``.  With ``density=1.0`` this is exactly a ``pmean`` and
-    the residual returns to zero.
+    the residual returns to zero.  ``order`` routes the reduction over an
+    explicit relay ring (see :func:`relay_psum`); the result is identical
+    up to float reassociation.
     """
     dtype = grad.dtype
     acc = grad.astype(jnp.float32)
@@ -219,7 +267,10 @@ def chunked_topk_exchange(
     mask = _topk_mask(m, k)
     sent = m * mask
     new_res = m - sent
-    out = jax.lax.pmean(sent, axis)
+    if order is not None:
+        out = relay_psum(sent, axis, order=order) / len(order)
+    else:
+        out = jax.lax.pmean(sent, axis)
     out = out.ravel()[:n].reshape(shape).astype(dtype)
     new_res = new_res.ravel()[:n].reshape(shape)
     return out, new_res
@@ -249,9 +300,16 @@ def sync_gradients(
     del leaf_specs
     if n_pods is None or n_pods <= 1:
         return grads, residuals
+    order = cfg.ring_order
+    if order is not None and len(order) != n_pods:
+        raise ValueError(
+            f"ring_order {order} does not cover the {n_pods}-pod axis"
+        )
     spec = cfg.spec
     if not spec.needs_residuals:
-        synced = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+        synced = jax.tree.map(
+            lambda g: _pod_mean(g, axis, n_pods, order), grads
+        )
         return synced, residuals
 
     res = residuals
@@ -260,9 +318,9 @@ def sync_gradients(
 
     def one(g, r):
         if g.size < cfg.min_leaf_size:
-            return jax.lax.pmean(g, axis), r
+            return _pod_mean(g, axis, n_pods, order), r
         return chunked_topk_exchange(
-            g, r, axis=axis, density=cfg.density, chunk=cfg.chunk
+            g, r, axis=axis, density=cfg.density, chunk=cfg.chunk, order=order
         )
 
     flat_g, td = jax.tree.flatten(grads)

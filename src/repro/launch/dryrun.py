@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes with ShapeDtypeStruct inputs (no allocation).
 
@@ -13,21 +10,37 @@ Per cell, records memory_analysis, cost_analysis, and the trip-count-aware
 HLO cost model (FLOPs / HBM bytes / per-axis collective link bytes) that
 feeds EXPERIMENTS.md §Dry-run and §Roofline.  Failures here are bugs in the
 sharding config, not in the models.
+
+Tiers: ``--tier full`` forces 512 host devices (the production meshes; too
+heavy for CI, opt-in), ``--tier reduced`` forces 16 devices on the same
+axis layout — the CI tier.  ``--smoke`` swaps in the reduced model configs
+so a reduced-tier cell compiles in seconds.  The device count is pinned via
+XLA_FLAGS *before* jax is imported, so this module must not import jax at
+module scope.
 """
 
 import argparse
 import json
+import os
 import time
 import traceback
 
-import jax
-import jax.numpy as jnp
+TIER_DEVICES = {"full": 512, "reduced": 16}
+
+
+def _force_devices(tier: str) -> int:
+    """Pin the host device count for ``tier``; must run before jax imports."""
+    n = TIER_DEVICES[tier]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    return n
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
-             density: float = 0.10, microbatches: int = 8) -> dict:
+             density: float = 0.10, microbatches: int = 8,
+             tier: str = "full", smoke: bool = False) -> dict:
+    import jax.numpy as jnp
     from ..configs.base import SHAPES
-    from ..configs.registry import get_config
+    from ..configs.registry import get_config, get_smoke_config
     from ..dist.collectives import SyncConfig
     from ..launch.hlo_cost import analyze_hlo
     from ..launch.mesh import make_production_mesh
@@ -42,9 +55,10 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
         input_specs,
     )
 
-    cfg = get_config(arch)
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                reduced=(tier == "reduced"))
     mesh_shape = dict(mesh.shape)
 
     # lean dtype policy for the very large models (fits the HBM budget)
@@ -57,7 +71,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
 
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
-        "mesh_shape": mesh_shape, "strategy": strategy,
+        "mesh_shape": mesh_shape, "strategy": strategy, "tier": tier,
+        "smoke": smoke,
         "kind": shape.kind, "param_dtype": str(tcfg.param_dtype.__name__),
         "microbatches": tcfg.microbatches,
     }
@@ -97,6 +112,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
         "peak_gb": (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9,
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # old jax: one dict per computation
+        ca = ca[0] if ca else {}
     rec["cost_analysis"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
@@ -127,10 +144,18 @@ def main():
                          "...); validated against the registry at build time")
     ap.add_argument("--density", type=float, default=0.10)
     ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--tier", default="full", choices=list(TIER_DEVICES),
+                    help="full = 512-device production meshes (opt-in, "
+                         "heavy); reduced = 16-device CI tier")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced model configs (CI-speed compiles)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+    n_dev = _force_devices(args.tier)
+    print(f"[tier] {args.tier}: {n_dev} forced host devices"
+          + (" (smoke configs)" if args.smoke else ""))
 
     if args.all:
         todo = cells()
@@ -149,6 +174,8 @@ def main():
     for arch, shape in todo:
         for mesh_kind in meshes:
             tag = f"{arch}__{shape.name}__{mesh_kind}__{args.strategy}"
+            if args.tier != "full":
+                tag += f"__{args.tier}"
             path = os.path.join(args.out, tag + ".json")
             if args.skip_existing and os.path.exists(path):
                 print(f"[skip] {tag}")
@@ -156,7 +183,8 @@ def main():
             print(f"[cell] {tag} ...", flush=True)
             try:
                 rec = run_cell(arch, shape.name, mesh_kind, args.strategy,
-                               args.density, args.microbatches)
+                               args.density, args.microbatches,
+                               tier=args.tier, smoke=args.smoke)
                 rec["status"] = "ok"
                 print(
                     f"    ok: compile {rec['compile_s']}s  "

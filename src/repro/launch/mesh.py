@@ -14,8 +14,13 @@ from ..dist import compat
 __all__ = ["make_production_mesh", "make_small_mesh"]
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, reduced: bool = False):
+    """Production mesh (512 devices), or the ``reduced`` 16-device tier —
+    the same axis layout scaled down so the dry-run compiles in CI."""
+    if reduced:
+        shape = (2, 2, 4) if multi_pod else (4, 4)
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(shape, axes)
 

@@ -23,6 +23,12 @@ def main():
                     help="registered device_sync strategy (flat/hier/geococo/"
                          "...); validated against the registry once jax is up")
     ap.add_argument("--density", type=float, default=0.10)
+    ap.add_argument("--control", action="store_true",
+                    help="attach a repro.control ControlPlane: a monitored "
+                         "inter-pod latency trace drives relay_psum ring "
+                         "order + replans through typed network events")
+    ap.add_argument("--control-noise", type=float, default=0.10,
+                    help="probe noise sigma for the monitored view")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--global-batch", type=int, default=8)
@@ -69,7 +75,23 @@ def main():
         vocab_size=cfg.vocab_size, seq_len=args.seq_len,
         global_batch=args.global_batch, seed=args.seed,
     )
-    trainer = Trainer(cfg, mesh, tcfg, run_cfg, data_cfg)
+    control = None
+    n_pods = dict(mesh.shape).get("pod", 1)
+    if args.control and n_pods > 1:
+        import numpy as np
+
+        from ..control import ControlPlane, MonitorView, TraceView
+        from ..core.latency import aws_latency_matrix, jitter_trace
+
+        # inter-pod WAN: the first n_pods AWS-style regions under jitter,
+        # observed through full-mesh EWMA probing (not ground truth)
+        base = aws_latency_matrix()[:n_pods, :n_pods]
+        trace = jitter_trace(base, max(args.steps, 2),
+                             np.random.default_rng(args.seed))
+        view = MonitorView(TraceView(trace), noise=args.control_noise,
+                           rng=np.random.default_rng(args.seed + 1))
+        control = ControlPlane(view)
+    trainer = Trainer(cfg, mesh, tcfg, run_cfg, data_cfg, control=control)
     if trainer.maybe_resume():
         print(f"resumed from step {trainer.step_idx}")
     hist = trainer.run()
@@ -77,6 +99,14 @@ def main():
         f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
         f"over {len(hist)} steps"
     )
+    if control is not None:
+        print(
+            f"control plane: {control.round} rounds, "
+            f"{control.replan_count} replans, relay order "
+            f"{control.relay_order}, events {control.event_counts()}, "
+            f"probe traffic {control.probe_bytes} B; "
+            f"step rebuilds {trainer.sync_rebuilds}"
+        )
 
 
 if __name__ == "__main__":

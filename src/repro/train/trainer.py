@@ -3,21 +3,28 @@
 Composes the jitted train step with:
 
 * periodic + async checkpointing (restart-safe, elastic restore),
-* **straggler mitigation**: per-step wall-times feed the same damped
-  Replanner machinery the database plane uses; sustained degradation of the
-  inter-pod link triggers a sync-strategy replan (e.g. new relay ring order
-  or a density drop for the geococo filter) — the training-plane analogue of
-  the paper's "Re-group damping strategy",
+* **network-adaptive synchronization**: the trainer subscribes to a
+  ``repro.control.ControlPlane`` — the same instance the WAN plane can
+  observe.  On :class:`~repro.control.events.RelayOrderChanged` (or any
+  event the configured ``device_sync`` strategy declares a reaction to in
+  the registry) it rebuilds the jitted step with the new ``relay_psum``
+  ring order / :class:`SyncConfig`.  Sustained straggler trips feed
+  ``ControlPlane.force_replan`` — the immediate, event-driven replan path,
 * **failure handling**: a step that raises (device loss) rolls back to the
   last checkpoint; duplicate replays are harmless because the optimizer
   state is versioned by ``step`` (applying the same step twice from the same
   checkpoint is deterministic and idempotent at the state level).
+
+The pre-control ``on_straggler`` callback is deprecated: it carried no
+typed payload and bypassed the strategy registry.  Pass ``control=`` a
+:class:`~repro.control.plane.ControlPlane` instead.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -46,6 +53,7 @@ class TrainerConfig:
     seed: int = 0
     straggler_threshold: float = 1.5   # step time vs EWMA
     straggler_sustain: int = 3
+    control_every: int = 1             # pump the ControlPlane every N steps
 
 
 class StragglerMonitor:
@@ -87,8 +95,14 @@ class Trainer:
         run_cfg: TrainerConfig,
         data_cfg: DataConfig | None = None,
         *,
+        control: "Any | None" = None,
         on_straggler: Callable[["Trainer"], None] | None = None,
     ):
+        """``control`` is a ``repro.control.ControlPlane``; the trainer
+        subscribes for network events and, when the plane carries its own
+        ``NetworkView``, pumps one control round every
+        ``run_cfg.control_every`` steps.  A plane without a view (shared
+        with a WAN-plane driver) is subscribe-only."""
         self.model_cfg = model_cfg
         self.mesh = mesh
         self.tcfg = tcfg
@@ -102,7 +116,20 @@ class Trainer:
         self.monitor = StragglerMonitor(
             run_cfg.straggler_threshold, run_cfg.straggler_sustain
         )
+        if on_straggler is not None:
+            warnings.warn(
+                "Trainer(on_straggler=...) is deprecated; pass control= a "
+                "repro.control.ControlPlane and subscribe to its typed "
+                "NetworkEvents instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
         self.on_straggler = on_straggler
+        self.control = control
+        self.network_events: list[Any] = []
+        self.sync_rebuilds = 0
+        if control is not None:
+            control.subscribe(self._on_network_event)
         self._pending_save = None
         self.history: list[dict[str, float]] = []
 
@@ -118,6 +145,29 @@ class Trainer:
         )
         self.step_idx = 0
         self._step_fn = None
+
+    # -- control-plane plumbing --------------------------------------------------
+
+    def _on_network_event(self, event) -> None:
+        """Apply the configured strategy's declared reaction to a network
+        event: an updated ``SyncConfig`` rebuilds the jitted step (new
+        relay ring order, density, ...); ``None`` means no reaction."""
+        self.network_events.append(event)
+        spec = self.tcfg.sync.spec
+        if spec.react is None:
+            return
+        new_sync = spec.react(self.tcfg.sync, event)
+        if new_sync is None or new_sync == self.tcfg.sync:
+            return
+        n_pods = self.mesh.shape.get("pod", 1)
+        if new_sync.ring_order is not None and len(new_sync.ring_order) != n_pods:
+            return  # event from a view whose nodes are not this mesh's pods
+        self.tcfg = dataclasses.replace(self.tcfg, sync=new_sync)
+        self.make_jit, self.shardings = build_train_step(
+            self.model_cfg, self.mesh, self.tcfg
+        )
+        self._step_fn = None  # recompile with the new collective program
+        self.sync_rebuilds += 1
 
     # -- checkpoint plumbing ---------------------------------------------------
 
@@ -190,8 +240,21 @@ class Trainer:
                 "dt": dt,
             }
             self.history.append(rec)
-            if self.monitor.observe(dt) and self.on_straggler is not None:
-                self.on_straggler(self)
+            if (
+                self.control is not None
+                and self.control.view is not None
+                and self.step_idx % max(1, cfg.control_every) == 0
+            ):
+                self.control.step()  # probe -> damped replan -> events
+            if self.monitor.observe(dt):
+                if self.control is not None:
+                    # sustained step-time degradation: event-driven replan,
+                    # effective immediately (not at the next observation)
+                    self.control.force_replan(
+                        reason=f"straggler@step{self.step_idx}"
+                    )
+                if self.on_straggler is not None:
+                    self.on_straggler(self)
             if cfg.ckpt_dir and self.step_idx % cfg.ckpt_every == 0:
                 self.save_ckpt()
             if self.step_idx % cfg.log_every == 0 or self.step_idx == cfg.steps:

@@ -120,6 +120,50 @@ def test_sync_gradients_strategies_agree_at_density_1(mesh):
     np.testing.assert_allclose(np.asarray(hb), np.asarray(gb), rtol=1e-5)
 
 
+def test_sync_gradients_ring_order_matches_pmean(mesh):
+    """A control-plane-fed ring_order routes the exchange through
+    relay_psum; the result equals the stock pmean path (up to float
+    reassociation) for both dense and filtered strategies."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(8, 64)), jnp.float32)
+
+    def body(g):
+        local = g * (1.0 + jax.lax.axis_index("pod").astype(jnp.float32))
+        grads = {"w": local}
+        res = jax.tree.map(jnp.zeros_like, grads)
+        h0, _ = sync_gradients(grads, None, SyncConfig(strategy="hier"),
+                               n_pods=2)
+        h1, _ = sync_gradients(
+            grads, None, SyncConfig(strategy="hier", ring_order=(1, 0)),
+            n_pods=2,
+        )
+        geo_cfg = SyncConfig(strategy="geococo", density=0.25, chunk=32,
+                             min_leaf_size=8)
+        g0, r0 = sync_gradients(grads, res, geo_cfg, n_pods=2)
+        g1, r1 = sync_gradients(
+            grads, res,
+            SyncConfig(strategy="geococo", density=0.25, chunk=32,
+                       min_leaf_size=8, ring_order=(1, 0)),
+            n_pods=2,
+        )
+        return h0["w"], h1["w"], g0["w"], g1["w"], r0["w"], r1["w"]
+
+    h0, h1, g0, g1, r0, r1 = _podmap(mesh, body)(g)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r0), np.asarray(r1), rtol=1e-6)
+
+
+def test_sync_config_ring_order_validation():
+    assert SyncConfig(ring_order=(2, 0, 1)).ring_order == (2, 0, 1)
+    with pytest.raises(ValueError, match="permutation"):
+        SyncConfig(ring_order=(0, 2))
+    with pytest.raises(ValueError, match="does not cover"):
+        sync_gradients({"w": jnp.ones((4,))}, None,
+                       SyncConfig(strategy="hier", ring_order=(0, 1, 2)),
+                       n_pods=2)
+
+
 def test_estimate_sync_bytes_ordering():
     n = 10_000_000
     flat = estimate_sync_bytes(n, SyncConfig(strategy="flat"), 2)
