@@ -1,8 +1,12 @@
-"""Paper Fig. 9: CDF of single-round all-to-all makespan.
+"""Paper Fig. 9: CDF of single-round all-to-all makespan — both engines.
 
 Origin (flat all-to-all) vs GeoCoCo grouping vs the theoretical lower bound
 (all-pairs shortest-path max), over a jittered AWS-style 10-region trace.
 Paper claims: CDF shifts left, >=100 ms reduction at p90, tighter tail.
+The paper-comparable series run under the **barrier** engine (the paper's
+Eq. 1 phase-sum objective); the event-driven DAG engine's CDF is reported
+alongside, and pipelining must shift the grouped CDF further left while
+never crossing the theoretical bound.
 """
 
 from __future__ import annotations
@@ -32,15 +36,21 @@ def run(quick: bool = True) -> dict:
 
     rp = Replanner(lambda l: best_plan(l, tiv=True, method="milp",
                                        time_limit_s=10.0))
-    origin, geo, lb = [], [], []
+    origin, geo, lb = [], [], []          # barrier engine (paper objective)
+    origin_ev, geo_ev = [], []            # event-driven DAG engine
     for lat in trace:
         sim = WANSimulator(lat, bw)
-        origin.append(sim.run(all_to_all_schedule(10, payload)).makespan_ms)
+        flat = all_to_all_schedule(10, payload)
+        origin.append(sim.run(flat, barrier=True).makespan_ms)
+        origin_ev.append(sim.run(flat).makespan_ms)
         plan = rp.observe(lat)
         sched = hierarchical_schedule(plan, payload, lat=lat, tiv=True)
-        geo.append(sim.run(sched).makespan_ms)
+        geo.append(sim.run(sched, barrier=True).makespan_ms)
+        geo_ev.append(sim.run(sched).makespan_ms)
         lb.append(sim.lower_bound_ms(payload))
-    origin, geo, lb = map(np.asarray, (origin, geo, lb))
+    origin, geo, lb, origin_ev, geo_ev = map(
+        np.asarray, (origin, geo, lb, origin_ev, geo_ev)
+    )
 
     def pct(x, q):
         return float(np.percentile(x, q))
@@ -50,6 +60,12 @@ def run(quick: bool = True) -> dict:
         "p90": {"origin": pct(origin, 90), "geococo": pct(geo, 90), "lb": pct(lb, 90)},
         "p99": {"origin": pct(origin, 99), "geococo": pct(geo, 99), "lb": pct(lb, 99)},
         "mean": {"origin": float(origin.mean()), "geococo": float(geo.mean())},
+        "event": {
+            "p50": {"origin": pct(origin_ev, 50), "geococo": pct(geo_ev, 50)},
+            "p90": {"origin": pct(origin_ev, 90), "geococo": pct(geo_ev, 90)},
+            "mean": {"origin": float(origin_ev.mean()),
+                     "geococo": float(geo_ev.mean())},
+        },
         "replans": rp.replan_count,
     }
     p90_red = res["p90"]["origin"] - res["p90"]["geococo"]
@@ -57,6 +73,9 @@ def run(quick: bool = True) -> dict:
     gap_closed = p90_red / max(res["p90"]["origin"] - res["p90"]["lb"], 1e-9)
     res["p90_reduction_ms"] = p90_red
     res["p90_gap_closed"] = float(gap_closed)
+    res["event"]["pipelining_p90_reduction_ms"] = (
+        res["p90"]["geococo"] - res["event"]["p90"]["geococo"]
+    )
 
     checks = [
         check(res["p50"]["geococo"] < res["p50"]["origin"],
@@ -73,6 +92,21 @@ def run(quick: bool = True) -> dict:
         check(res["replans"] <= n_rounds // 5,
               "Fig9: damped replanning (no per-round churn)",
               f"{res['replans']} replans / {n_rounds} rounds"),
+        # percentile dominance, not per-round .all(): event <= barrier is
+        # not a per-round invariant for dep-edged DAGs, and the MILP's time
+        # limit makes exact plans machine-speed dependent — the distribution
+        # shift is the claim, and it is robust to both
+        check(res["event"]["p50"]["geococo"] < res["p50"]["geococo"]
+              and res["event"]["p90"]["geococo"] <= res["p90"]["geococo"]
+              and res["event"]["mean"]["geococo"] < res["mean"]["geococo"],
+              "Fig9: event-driven DAG shifts the grouped CDF further left "
+              "(lower median/mean, p90 no worse)",
+              f'p50 {res["p50"]["geococo"]:.0f} -> '
+              f'{res["event"]["p50"]["geococo"]:.0f} ms, p90 '
+              f'{res["p90"]["geococo"]:.0f} -> '
+              f'{res["event"]["p90"]["geococo"]:.0f} ms'),
+        check(bool((geo_ev >= lb - 1e-6).all()),
+              "Fig9: pipelined makespan still respects the theoretical bound"),
     ]
     return {"figure": "Fig9", "makespan_ms": res, "checks": checks}
 

@@ -10,7 +10,12 @@ Three views of the same strategy surface:
   accounting must reproduce the device-plane reduction factors (the two
   planes share one wire model through the strategy registry);
 * **measured** — dry-run artifacts (results/dryrun/*.json), when present,
-  report the per-axis collective link bytes XLA actually emits;
+  report the per-axis collective link bytes XLA actually emits; the
+  reduced-tier artifacts the CI cell produces (results/dryrun-reduced/)
+  are additionally *checked* against ``estimate_sync_bytes``: the per-leaf
+  analytic model must stay within 2x of the pod-axis bytes XLA really
+  moved, or the check fails — the estimator is load-bearing for planning,
+  so silent drift is a bug;
 * **control-plane** — the relay ring ``relay_psum`` would run is computed
   from a *monitor-estimated* inter-pod latency matrix (a ``repro.control``
   NetworkView), and compared against the ground-truth ring: estimate-vs-
@@ -58,6 +63,51 @@ def _wan_plane_bytes(shard_bytes: float, *, filtered: float | None) -> float:
         gp = np.full(plan.k, filtered)
         sched = hierarchical_schedule(plan, shard_bytes, group_payload_bytes=gp)
     return sched.total_bytes
+
+
+def _measured_vs_estimate() -> dict:
+    """Reduced-tier dry-run artifacts vs the analytic wire model.
+
+    For every ``results/dryrun-reduced/*.json`` multi-pod cell, compare the
+    pure pod-axis collective link bytes XLA emitted (per device, per step —
+    the compact ``collective_link_bytes_by_axes['pod']`` summary) against
+    ``estimate_sync_bytes`` fed the *actual gradient pytree* of the compiled
+    config with ``shard_factor`` = in-pod devices, so the estimator's
+    per-leaf dense-fallback / chunk-granular top-k accounting is exercised
+    exactly as ``sync_gradients`` applies it.
+    """
+    out = {}
+    for path in sorted(glob.glob("results/dryrun-reduced/*.json")):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            continue
+        mesh_shape = rec.get("mesh_shape", {})
+        n_pods = int(mesh_shape.get("pod", 1))
+        if n_pods <= 1:
+            continue
+        import jax.numpy as jnp
+
+        from repro.configs.registry import get_smoke_config
+        from repro.train.train_step import abstract_params
+
+        cfg = (get_smoke_config(rec["arch"]) if rec.get("smoke")
+               else get_config(rec["arch"]))
+        params = abstract_params(cfg, jnp.float32)
+        in_pod = float(mesh_shape.get("data", 1) * mesh_shape.get("model", 1))
+        bpv = 2 if "bf" in rec.get("param_dtype", "float32") else 4
+        est = estimate_sync_bytes(
+            params,
+            SyncConfig(strategy=rec["strategy"],
+                       density=rec.get("density", DENSITY)),
+            n_pods, bytes_per_value=bpv, shard_factor=in_pod,
+        )
+        meas = float(rec["collective_link_bytes_by_axes"].get("pod", 0.0))
+        out[f"{rec['arch']}__{rec['shape']}__{rec['strategy']}"] = {
+            "measured_pod_bytes": meas,
+            "estimate_bytes": est,
+            "ratio": meas / est if est > 0 else float("inf"),
+        }
+    return out
 
 
 def _relay_ring_from_view(quick: bool, view_factory) -> dict:
@@ -153,6 +203,14 @@ def run(quick: bool = True, view_factory=None) -> dict:
             "model_link_bytes": rec["collective_link_bytes_by_axes"].get("model", 0.0),
         }
 
+    # reduced-tier CI artifacts: measured XLA pod-axis bytes vs the analytic
+    # estimator, per strategy.  >2x drift in either direction fails the run.
+    measured_reduced = _measured_vs_estimate()
+    for key, rec in measured_reduced.items():
+        print(f"  dryrun-reduced {key}: measured {rec['measured_pod_bytes']/1e3:.1f} KB "
+              f"vs estimate {rec['estimate_bytes']/1e3:.1f} KB "
+              f"(ratio {rec['ratio']:.2f})")
+
     checks = [
         check(all(v["hier_vs_flat"] > 0.9 for v in analytic.values()),
               "Sync: hierarchical (FSDP-scattered) cuts inter-pod bytes ~16x",
@@ -169,10 +227,18 @@ def run(quick: bool = True, view_factory=None) -> dict:
               "within 15% of ground-truth bottleneck latency",
               f"cost_ratio={ring['cost_ratio']:.3f} "
               f"agreement={ring['edge_agreement']:.1%}"),
+        check(all(0.5 <= r["ratio"] <= 2.0 for r in measured_reduced.values()),
+              "Measured: estimate_sync_bytes stays within 2x of the XLA "
+              "pod-axis collective bytes on the reduced-tier dry-run cells",
+              (", ".join(f"{k.split('__')[-1]}={v['ratio']:.2f}x"
+                         for k, v in measured_reduced.items())
+               if measured_reduced
+               else "no artifacts (run repro.launch.dryrun --tier reduced)")),
     ]
     return {"figure": "sync-strategies", "analytic": analytic,
             "two_plane": two_plane, "relay_ring": ring,
-            "measured": measured, "checks": checks}
+            "measured": measured, "measured_reduced": measured_reduced,
+            "checks": checks}
 
 
 if __name__ == "__main__":

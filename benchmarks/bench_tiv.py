@@ -115,6 +115,11 @@ def run(
                                    rng=np.random.default_rng(7)),
             "vivaldi": VivaldiView(TraceView(trace), samples_per_node=3,
                                    verify_every=5, seed=7),
+            # monitor-seeded warmup: the first K rounds measure the full
+            # mesh directly and seed the coordinates (the small-n fix)
+            "vivaldi-warm": VivaldiView(TraceView(trace), samples_per_node=3,
+                                        verify_every=5, warmup_rounds=5,
+                                        seed=7),
         }
     agreement = {
         name: relay_order_agreement(trace, v, rounds=agree_rounds)
@@ -151,6 +156,26 @@ def run(
                 "Control: Vivaldi view cuts probe traffic >2x vs full-mesh "
                 "monitoring (Sec 6.4 regime)",
                 f"{agreement['vivaldi']['probe_bytes']} vs "
+                f"{agreement['monitor']['probe_bytes']} B",
+            ),
+            check(
+                agreement["vivaldi-warm"]["edge_agreement"]
+                > agreement["vivaldi"]["edge_agreement"]
+                and agreement["vivaldi-warm"]["cost_ratio"]
+                <= agreement["vivaldi"]["cost_ratio"] + 1e-9,
+                "Control: monitor-seeded warmup improves Vivaldi relay-order "
+                "agreement at small n (coordinates start near-correct)",
+                f"agreement {agreement['vivaldi']['edge_agreement']:.1%} -> "
+                f"{agreement['vivaldi-warm']['edge_agreement']:.1%}, "
+                f"cost_ratio {agreement['vivaldi']['cost_ratio']:.3f} -> "
+                f"{agreement['vivaldi-warm']['cost_ratio']:.3f}",
+            ),
+            check(
+                agreement["vivaldi-warm"]["probe_bytes"]
+                < agreement["monitor"]["probe_bytes"],
+                "Control: warmup's K full-mesh rounds keep Vivaldi under the "
+                "monitor's probe budget",
+                f"{agreement['vivaldi-warm']['probe_bytes']} vs "
                 f"{agreement['monitor']['probe_bytes']} B",
             ),
         ]

@@ -24,6 +24,7 @@ from . import (
     bench_grouping_strategies,
     bench_loss_jitter,
     bench_makespan_cdf,
+    bench_makespan_regression,
     bench_scaling_cost_benefit,
     bench_skew,
     bench_sync_strategies,
@@ -34,6 +35,9 @@ from . import (
 MODULES = [
     ("Fig5", bench_tiv),
     ("Fig9", bench_makespan_cdf),
+    # tripwire for the transmission engine: the event-driven DAG must never
+    # lose to (and on trace topologies must strictly beat) barrier phases
+    ("makespan-regression", bench_makespan_regression),
     ("Fig10", bench_comm_heatmap),
     ("Fig11", bench_throughput),
     ("Fig12", bench_grouping_strategies),

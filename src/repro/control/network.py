@@ -160,6 +160,15 @@ class VivaldiView:
     (every ``verify_every`` rounds) that pins drifting entries back to direct
     measurements.  The estimate is symmetrized with a zero diagonal so
     downstream planners see a valid latency matrix.
+
+    ``warmup_rounds > 0`` enables the monitor-seeded warmup: the first K
+    ``sample()`` calls run a full-mesh direct measurement (paying the
+    monitor's ``n*(n-1)`` probes), seed the coordinate system from the
+    measured matrix (classical-MDS placement,
+    :meth:`~repro.core.monitor.VivaldiSystem.seed_from_matrix`) and return
+    the direct measurement itself.  This fixes the poor small-n relay-order
+    agreement of randomly initialized coordinates: after warmup the spring
+    system starts near-correct and the cheap sparse rounds only track drift.
     """
 
     def __init__(
@@ -170,6 +179,7 @@ class VivaldiView:
         verify_every: int = 10,
         verify_frac: float = 0.05,
         verify_tol: float = 0.25,
+        warmup_rounds: int = 0,
         cfg: VivaldiConfig | None = None,
         seed: int = 0,
     ):
@@ -179,6 +189,7 @@ class VivaldiView:
         self.verify_every = max(1, verify_every)
         self.verify_frac = verify_frac
         self.verify_tol = verify_tol
+        self.warmup_rounds = max(0, warmup_rounds)
         self._rng = np.random.default_rng(seed)
         self.system = VivaldiSystem(self.n, cfg, seed=seed)
         self._round = 0
@@ -191,10 +202,17 @@ class VivaldiView:
 
     def sample(self) -> np.ndarray:
         t = self._truth.sample()
+        self._round += 1
+        if self._round <= self.warmup_rounds:
+            # monitor-seeded warmup: full-mesh direct RTTs seed the
+            # coordinates and ARE the estimate for this round
+            self.system.seed_from_matrix(t)
+            self.system.probe_count += self.n * (self.n - 1)
+            self._est = self._clean(t.copy())
+            return self._est.copy()
         self.system.fit(
             t, rounds=1, samples_per_node=self.samples_per_node, rng=self._rng
         )
-        self._round += 1
         if self._round % self.verify_every == 0:
             est = self.system.verify_and_correct(
                 t, sample_frac=self.verify_frac, rng=self._rng,

@@ -77,6 +77,53 @@ def ring_cost(lat: np.ndarray, order: Iterable[int]) -> tuple[float, float]:
     return (max(hops), sum(hops)) if hops else (0.0, 0.0)
 
 
+def _two_opt(
+    eff: np.ndarray,
+    order: list[int],
+    *,
+    touched: set[int] | None = None,
+    on_eval: Callable[[], None] | None = None,
+) -> list[int]:
+    """2-opt refinement on the (max, sum) ring objective.
+
+    ``touched`` restricts the neighborhood to moves whose removed/created
+    ring edges involve one of the given nodes (the per-edge incremental
+    path); ``None`` sweeps the full neighborhood.  ``on_eval`` is called
+    once per candidate evaluated (search-cost accounting).
+    """
+    n = len(order)
+    best_cost = ring_cost(eff, order)
+    improved = True
+    while improved:
+        improved = False
+        for a in range(n - 1):
+            for b in range(a + 2, n):
+                if a == 0 and b == n - 1:
+                    continue  # reversing the whole ring is a no-op
+                if touched is not None:
+                    ends = {order[a], order[a + 1],
+                            order[b], order[(b + 1) % n]}
+                    if not (ends & touched):
+                        continue  # move doesn't touch a signalled edge
+                if on_eval is not None:
+                    on_eval()
+                cand = (order[: a + 1] + order[a + 1: b + 1][::-1]
+                        + order[b + 1:])
+                c = ring_cost(eff, cand)
+                if c < best_cost:
+                    order, best_cost = cand, c
+                    improved = True
+    return order
+
+
+def _ring_metric(lat: np.ndarray, *, tiv: bool, tiv_margin: float) -> np.ndarray:
+    """The symmetric hop-cost matrix the ring searches score against."""
+    eff = lat
+    if tiv:
+        eff, _ = one_relay_effective(lat, margin=tiv_margin)
+    return np.maximum(eff, eff.T)
+
+
 def relay_ring_order(
     lat: np.ndarray, *, tiv: bool = False, tiv_margin: float = 0.05
 ) -> tuple[int, ...]:
@@ -102,10 +149,7 @@ def relay_ring_order(
     n = lat.shape[0]
     if n <= 2:
         return tuple(range(n))
-    eff = lat
-    if tiv:
-        eff, _ = one_relay_effective(lat, margin=tiv_margin)
-    eff = np.maximum(eff, eff.T)
+    eff = _ring_metric(lat, tiv=tiv, tiv_margin=tiv_margin)
 
     # greedy nearest-neighbor seed
     order = [0]
@@ -116,21 +160,7 @@ def relay_ring_order(
         order.append(nxt)
         left.remove(nxt)
 
-    # 2-opt on the (max, sum) objective
-    best_cost = ring_cost(eff, order)
-    improved = True
-    while improved:
-        improved = False
-        for a in range(n - 1):
-            for b in range(a + 2, n):
-                if a == 0 and b == n - 1:
-                    continue  # reversing the whole ring is a no-op
-                cand = order[: a + 1] + order[a + 1 : b + 1][::-1] + order[b + 1 :]
-                c = ring_cost(eff, cand)
-                if c < best_cost:
-                    order, best_cost = cand, c
-                    improved = True
-    return _canonical_ring(order)
+    return _canonical_ring(_two_opt(eff, order))
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +195,14 @@ class ControlPlane:
         hops ride overlay relays, Sec 5).  ``ring_tiv`` governs the relay
         *ring* search and defaults to False because ``relay_psum`` executes
         direct hops — see :func:`relay_ring_order`.
+    rank_payload_bytes / rank_bandwidth_mbps / barrier:
+        Replan-scoring context for the built-in default planner.  With a
+        payload estimate, candidate plans are ranked by the simulated round
+        makespan — the event-driven transfer-DAG critical path by default
+        (``barrier=True`` scores the legacy phase-sum), so replans reward
+        grouping that overlaps gather/exchange/scatter stages.  Consumers
+        with live context (the replication engine's payload-EWMA planner)
+        still override via :meth:`bind_planner`.
     """
 
     def __init__(
@@ -183,6 +221,9 @@ class ControlPlane:
         tiv_margin: float = 0.05,
         planner: str = "kcenter",
         planner_time_limit_s: float = 5.0,
+        rank_payload_bytes: float | None = None,
+        rank_bandwidth_mbps: float | np.ndarray | None = None,
+        barrier: bool = False,
     ):
         self.view = as_view(view) if view is not None else None
         self.tiv = tiv
@@ -193,6 +234,9 @@ class ControlPlane:
             plan_fn = lambda lat: best_plan(  # noqa: E731
                 lat, tiv=tiv, tiv_margin=tiv_margin, method=planner,
                 time_limit_s=planner_time_limit_s,
+                payload_bytes=rank_payload_bytes,
+                bandwidth_mbps=rank_bandwidth_mbps,
+                barrier=barrier,
             )
         self.replanner = Replanner(
             plan_fn, threshold=replan_threshold, sustain=replan_sustain
@@ -210,6 +254,12 @@ class ControlPlane:
         self._over = self._under = None
         self._degraded = None
         self.events: list[NetworkEvent] = []
+        # relay-order search accounting: full recomputes vs per-edge
+        # incremental refinements, and 2-opt candidate evaluations on the
+        # incremental path (the scaling metric past ~64 pods)
+        self.relay_full_searches = 0
+        self.relay_incremental_searches = 0
+        self.relay_incremental_evals = 0
 
     # -- planner binding --------------------------------------------------------
 
@@ -349,23 +399,56 @@ class ControlPlane:
                 reason="initial" if prev_plan is None else "sustained-deviation",
             ))
         # relay order follows the same damping: recompute only on a
-        # sustained signal (replan or link transition), never on raw jitter
-        if plan_changed or link_events or self._relay_order is None:
+        # sustained signal (replan or link transition), never on raw jitter.
+        # A plan change (or a missing ring) triggers the full search; a
+        # link-only signal takes the per-edge incremental path — only 2-opt
+        # moves whose ring edges touch the degraded/recovered endpoints are
+        # re-evaluated, so the search cost scales with the signal, not n^2.
+        if plan_changed or self._relay_order is None:
             self._update_relay_order(lat, reason=(
                 "plan-changed" if plan_changed else "link-event"
             ))
+        elif link_events:
+            self._incremental_relay_update(lat, link_events, reason="link-event")
         return plan
 
-    def _update_relay_order(self, lat: np.ndarray, *, reason: str) -> None:
-        order = relay_ring_order(
-            lat, tiv=self.ring_tiv, tiv_margin=self.tiv_margin
-        )
+    def _set_relay_order(self, order: tuple[int, ...], *, reason: str) -> None:
         if order != self._relay_order:
             prev = self._relay_order
             self._relay_order = order
             self._emit(RelayOrderChanged(
                 round=self._round, order=order, previous=prev, reason=reason,
             ))
+
+    def _update_relay_order(self, lat: np.ndarray, *, reason: str) -> None:
+        self.relay_full_searches += 1
+        order = relay_ring_order(
+            lat, tiv=self.ring_tiv, tiv_margin=self.tiv_margin
+        )
+        self._set_relay_order(order, reason=reason)
+
+    def _incremental_relay_update(
+        self, lat: np.ndarray, link_events: Iterable[NetworkEvent], *,
+        reason: str,
+    ) -> None:
+        """Per-edge incremental 2-opt: refine the current ring against the
+        fresh matrix, evaluating only moves whose removed/created ring edges
+        touch an endpoint of a degraded or recovered link.  The damping
+        contract is unchanged — this still fires only on sustained link
+        transitions — but the ring is repaired locally instead of re-planned
+        globally."""
+        self.relay_incremental_searches += 1
+        order = list(self._relay_order)
+        if len(order) <= 3:  # every 3-node ring is equivalent; nothing to repair
+            return
+        touched = {e.i for e in link_events} | {e.j for e in link_events}
+        eff = _ring_metric(lat, tiv=self.ring_tiv, tiv_margin=self.tiv_margin)
+
+        def count():
+            self.relay_incremental_evals += 1
+
+        order = _two_opt(eff, order, touched=touched, on_eval=count)
+        self._set_relay_order(_canonical_ring(order), reason=reason)
 
     # -- forced transitions -----------------------------------------------------
 

@@ -493,6 +493,7 @@ def best_plan(
     payload_bytes: float | None = None,
     bandwidth_mbps: float | np.ndarray | None = None,
     filter_keep: float = 1.0,
+    barrier: bool = False,
 ) -> GroupPlan:
     """GeoCoCo's guided planner: search k in the band around k*, keep the best.
 
@@ -502,11 +503,16 @@ def best_plan(
     the paper's robustness results (Fig. 17) rely on.
 
     When ``payload_bytes`` is given, candidates are ranked by the simulated
-    3-phase round makespan (latency + NIC-contended serialization, with
+    round makespan (latency + NIC-contended serialization, with
     ``filter_keep`` modeling the aggregator-side payload reduction) instead
     of the latency-only MILP objective — the "balance latency and resource
-    utilization" behavior of the Planner (Sec 4.1).  The MILP itself stays
-    Algorithm 1's latency formulation.
+    utilization" behavior of the Planner (Sec 4.1).  The makespan is the
+    event-driven **transfer-DAG critical path** by default, so grouping
+    decisions reward cross-stage overlap (a plan whose fast groups exchange
+    while slow groups still gather scores better than the phase-sum would
+    suggest); pass ``barrier=True`` to rank by the legacy barrier phase-sum
+    instead (what a barrier engine will actually execute).  The MILP itself
+    stays Algorithm 1's latency formulation.
 
     The guided band is the ~order-of-magnitude planning-cost reduction vs
     exhaustive k in [2, N-1] claimed in Sec 6.4.
@@ -519,7 +525,7 @@ def best_plan(
         from .simulator import WANSimulator
 
         bw = np.inf if bandwidth_mbps is None else bandwidth_mbps
-        sim = WANSimulator(lat, bw)
+        sim = WANSimulator(lat, bw, barrier=barrier)
         gp = np.array(
             [sum(payload_bytes for _ in g) * filter_keep for g in p.groups]
         )

@@ -6,33 +6,47 @@ timeouts), producing the round *makespan*, per-node/per-link byte counters
 and per-pair message-frequency matrices — the raw measurements behind the
 paper's Figs. 9, 10, 13, 14, 16 and 17.
 
-Transfer-time model (one transfer of ``B`` bytes over link (s, d)):
+Two execution engines over the same wire model:
+
+* **event-driven** (default): a fluid-flow event-queue simulation of the
+  transfer DAG.  Each transfer starts the moment its dependencies have been
+  delivered (plus its ``compute_ms`` CPU stage); NIC contention is computed
+  from the set of flows *actually moving bytes concurrently in time* — a
+  node's access link is shared equally among its live flows, and rates are
+  re-solved at every flow start/finish.  Relayed transfers (``via >= 0``)
+  run as two chained hops (store-and-forward: the second hop starts at the
+  first hop's delivery).  The makespan is the DAG critical path, which the
+  :class:`RoundResult` exposes via per-transfer start/finish times and a
+  backtracked critical-path trace.
+
+* **barrier** (``barrier=True``): the pre-DAG semantics, kept for regression
+  comparison.  Phases (the schedule's derived compatibility view) are
+  barrier-synchronized; within a phase each flow is charged the phase-static
+  contention factor ``max(out_degree(src), in_degree(dst))``, and the round
+  makespan is the *sum of the phase maxima* (the paper's Eq. 1 objective
+  generalized to include transmission time).  This reproduces the
+  pre-refactor phase-sum numbers exactly.
+
+Transfer-time model (one hop of ``B`` bytes over link (s, d)):
 
     t = propagation(s, d) + B * 8 * c / bandwidth(s, d)        [ms]
 
-where ``c`` is the **access-link contention factor**: within a phase, a
-node's NIC serializes its concurrent flows, so each flow effectively gets
-``bw / max(out_degree(src), in_degree(dst))``.  This is what makes the flat
-all-to-all expensive in practice (every node carries n-1 concurrent flows)
-and aggregation cheap (degree <= group size) — the economics behind the
-paper's Fig. 3 and Sec 2.2.
+where ``c`` is the access-link contention factor (phase-static degrees under
+``barrier``; the time-varying live-flow count under the event engine).  This
+is what makes the flat all-to-all expensive in practice (every node carries
+n-1 concurrent flows) and aggregation cheap (degree <= group size) — the
+economics behind the paper's Fig. 3 and Sec 2.2.
 
 Propagation is inflated by expected retransmissions under loss ``p``
 (geometric retries, each costing timeout ``tau``):
 
     t += (p / (1 - p)) * tau
-
-Relayed transfers (``via >= 0``) pay both hops' propagation and both hops'
-(contended) serialization — a user-space store-and-forward overlay relay.
-
-Phases are barrier-synchronized; the makespan of a round is the sum of the
-phase maxima (the paper's Eq. 1 objective generalized to include transmission
-time).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
@@ -50,14 +64,30 @@ class RoundResult:
     msg_matrix: np.ndarray         # (n, n) message counts, src -> dst
     link_bytes: np.ndarray         # (n, n) bytes moved per directed link
     n_transfers: int
+    start_ms: np.ndarray | None = None    # per transfer: wire start (post-compute)
+    finish_ms: np.ndarray | None = None   # per transfer: delivery at dst
+    critical_path: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def total_bytes(self) -> float:
         return float(self.link_bytes.sum())
 
+    @property
+    def critical_path_ms(self) -> float:
+        """Alias for the makespan — under the event engine this is the DAG
+        critical path, under ``barrier`` the phase-sum."""
+        return self.makespan_ms
+
 
 class WANSimulator:
-    """Simulates schedule execution over a given network state."""
+    """Simulates schedule execution over a given network state.
+
+    ``barrier=True`` selects the legacy phase-sum engine (exact pre-DAG
+    numbers); the default runs the event-driven DAG engine.  Byte, message
+    and link accounting are identical across both engines — only timing
+    differs — so consistency checks (digests, WAN-byte counters) are
+    engine-independent.
+    """
 
     def __init__(
         self,
@@ -68,6 +98,7 @@ class WANSimulator:
         retx_timeout_ms: float = 200.0,
         rng: np.random.Generator | None = None,
         stochastic_loss: bool = False,
+        barrier: bool = False,
     ):
         self.lat = np.asarray(latency_ms, dtype=float)
         n = self.lat.shape[0]
@@ -78,11 +109,11 @@ class WANSimulator:
         self.retx_timeout_ms = retx_timeout_ms
         self.rng = rng or np.random.default_rng(0)
         self.stochastic_loss = stochastic_loss
+        self.barrier = barrier
 
-    # -- single-transfer cost ------------------------------------------------
+    # -- single-hop cost -----------------------------------------------------
 
-    def _hop_time(self, s: int, d: int, nbytes: float,
-                  contention: float = 1.0) -> float:
+    def _prop_ms(self, s: int, d: int) -> float:
         prop = self.lat[s, d]
         p = float(self.loss[s, d])
         if p > 0.0:
@@ -91,6 +122,11 @@ class WANSimulator:
                 prop += retries * self.retx_timeout_ms
             else:
                 prop += (p / (1.0 - p)) * self.retx_timeout_ms
+        return float(prop)
+
+    def _hop_time(self, s: int, d: int, nbytes: float,
+                  contention: float = 1.0) -> float:
+        prop = self._prop_ms(s, d)
         bw = self.bw[s, d]
         tx = (
             0.0
@@ -111,51 +147,97 @@ class WANSimulator:
             t.src, t.via, t.nbytes, c(t.src, t.via)
         ) + self._hop_time(t.via, t.dst, t.nbytes, c(t.via, t.dst))
 
-    # -- full round ----------------------------------------------------------
+    # -- byte / message accounting (engine-independent) ------------------------
 
-    def run(self, schedule: TransmissionSchedule) -> RoundResult:
+    def _account(self, schedule: TransmissionSchedule):
         n = self.n
         bytes_out = np.zeros(n)
         bytes_in = np.zeros(n)
         msg = np.zeros((n, n), dtype=int)
         link = np.zeros((n, n))
-        phase_ms: list[float] = []
+        for t in schedule.all_transfers():
+            if t.via < 0:
+                bytes_out[t.src] += t.nbytes
+                bytes_in[t.dst] += t.nbytes
+                msg[t.src, t.dst] += 1
+                link[t.src, t.dst] += t.nbytes
+            else:
+                bytes_out[t.src] += t.nbytes
+                bytes_in[t.via] += t.nbytes
+                bytes_out[t.via] += t.nbytes
+                bytes_in[t.dst] += t.nbytes
+                msg[t.src, t.via] += 1
+                msg[t.via, t.dst] += 1
+                link[t.src, t.via] += t.nbytes
+                link[t.via, t.dst] += t.nbytes
+        return bytes_out, bytes_in, msg, link
+
+    # -- full round ----------------------------------------------------------
+
+    def run(self, schedule: TransmissionSchedule,
+            barrier: bool | None = None) -> RoundResult:
+        if barrier if barrier is not None else self.barrier:
+            return self._run_barrier(schedule)
+        return self._run_event(schedule)
+
+    # -- barrier engine (pre-DAG phase-sum semantics) --------------------------
+
+    def _phase_degrees(self, phase):
+        """NIC contention degrees of one barrier phase: concurrent flows
+        within the phase share each node's access link (phase-static)."""
+        out_deg = np.zeros(self.n, dtype=int)
+        in_deg = np.zeros(self.n, dtype=int)
+        for t in phase:
+            if t.via < 0:
+                out_deg[t.src] += 1
+                in_deg[t.dst] += 1
+            else:
+                out_deg[t.src] += 1
+                in_deg[t.via] += 1
+                out_deg[t.via] += 1
+                in_deg[t.dst] += 1
+        return out_deg, in_deg
+
+    def barrier_makespan_ms(self, schedule: TransmissionSchedule) -> float:
+        """Phase-sum makespan alone — no byte accounting, no per-transfer
+        timeline.  The cheap serialized reference the pipelined replication
+        engine reports its overlap split against every epoch."""
+        total = 0.0
         for phase in schedule.phases:
             if not phase:
+                continue
+            out_deg, in_deg = self._phase_degrees(phase)
+            total += max(
+                self.transfer_time_ms(t, out_deg, in_deg) for t in phase
+            )
+        return total
+
+    def _run_barrier(self, schedule: TransmissionSchedule) -> RoundResult:
+        m = schedule.n_transfers
+        start = np.zeros(m)
+        finish = np.zeros(m)
+        phase_ms: list[float] = []
+        crit: list[int] = []
+        t_base = 0.0
+        for phase_idx in schedule.phase_indices():
+            if not phase_idx:
                 phase_ms.append(0.0)
                 continue
-            # NIC contention: concurrent flows within the phase share each
-            # node's access link.
-            out_deg = np.zeros(n, dtype=int)
-            in_deg = np.zeros(n, dtype=int)
-            for t in phase:
-                if t.via < 0:
-                    out_deg[t.src] += 1
-                    in_deg[t.dst] += 1
-                else:
-                    out_deg[t.src] += 1
-                    in_deg[t.via] += 1
-                    out_deg[t.via] += 1
-                    in_deg[t.dst] += 1
+            phase = [schedule.transfers[i] for i in phase_idx]
+            out_deg, in_deg = self._phase_degrees(phase)
             tmax = 0.0
-            for t in phase:
+            tmax_idx = -1
+            for i, t in zip(phase_idx, phase):
                 tt = self.transfer_time_ms(t, out_deg, in_deg)
-                tmax = max(tmax, tt)
-                if t.via < 0:
-                    bytes_out[t.src] += t.nbytes
-                    bytes_in[t.dst] += t.nbytes
-                    msg[t.src, t.dst] += 1
-                    link[t.src, t.dst] += t.nbytes
-                else:
-                    bytes_out[t.src] += t.nbytes
-                    bytes_in[t.via] += t.nbytes
-                    bytes_out[t.via] += t.nbytes
-                    bytes_in[t.dst] += t.nbytes
-                    msg[t.src, t.via] += 1
-                    msg[t.via, t.dst] += 1
-                    link[t.src, t.via] += t.nbytes
-                    link[t.via, t.dst] += t.nbytes
+                start[i] = t_base
+                finish[i] = t_base + tt
+                if tt > tmax:
+                    tmax, tmax_idx = tt, i
             phase_ms.append(tmax)
+            if tmax_idx >= 0:
+                crit.append(tmax_idx)
+            t_base += tmax
+        bytes_out, bytes_in, msg, link = self._account(schedule)
         return RoundResult(
             makespan_ms=float(sum(phase_ms)),
             phase_ms=phase_ms,
@@ -163,7 +245,146 @@ class WANSimulator:
             bytes_in=bytes_in,
             msg_matrix=msg,
             link_bytes=link,
-            n_transfers=schedule.n_transfers,
+            n_transfers=m,
+            start_ms=start,
+            finish_ms=finish,
+            critical_path=crit,
+        )
+
+    # -- event-driven engine (fluid-flow DAG simulation) -----------------------
+
+    def _run_event(self, schedule: TransmissionSchedule) -> RoundResult:
+        transfers = schedule.transfers
+        m = len(transfers)
+        bytes_out, bytes_in, msg, link = self._account(schedule)
+        if m == 0:
+            return RoundResult(
+                makespan_ms=0.0, phase_ms=[], bytes_out=bytes_out,
+                bytes_in=bytes_in, msg_matrix=msg, link_bytes=link,
+                n_transfers=0, start_ms=np.zeros(0), finish_ms=np.zeros(0),
+            )
+
+        hops = [  # per transfer: the 1 or 2 (src, dst) wire hops
+            [(t.src, t.dst)] if t.via < 0 else [(t.src, t.via), (t.via, t.dst)]
+            for t in transfers
+        ]
+        indeg = [len(t.deps) for t in transfers]
+        children: list[list[int]] = [[] for _ in range(m)]
+        for i, t in enumerate(transfers):
+            for d in t.deps:
+                children[d].append(i)
+
+        start = np.full(m, np.nan)      # wire start (after deps + compute)
+        finish = np.full(m, np.nan)     # delivery of the final hop at dst
+        pred = np.full(m, -1, dtype=int)  # latest-finishing dependency
+        # timed events: (time, seq, kind, tid, hop)
+        #   kind 0 = hop starts transmitting, 1 = hop delivered
+        events: list[tuple[float, int, int, int, int]] = []
+        seq = 0
+        # live byte-flows, vectorized (the loop re-solves every flow's rate
+        # at each event, so this state must be numpy, not a dict)
+        active = np.zeros(m, dtype=bool)
+        rem = np.zeros(m)                      # remaining bytes, current hop
+        cur_s = np.zeros(m, dtype=int)         # current hop endpoints
+        cur_d = np.zeros(m, dtype=int)
+        cur_hop = np.zeros(m, dtype=int)
+        out_cnt = np.zeros(self.n, dtype=int)
+        in_cnt = np.zeros(self.n, dtype=int)
+
+        def push(time: float, kind: int, tid: int, hop: int):
+            nonlocal seq
+            heapq.heappush(events, (time, seq, kind, tid, hop))
+            seq += 1
+
+        def begin_hop(now: float, tid: int, hop: int):
+            s, d = hops[tid][hop]
+            if hop == 0:
+                start[tid] = now
+            t = transfers[tid]
+            if t.nbytes <= 0.0 or not np.isfinite(self.bw[s, d]):
+                # nothing to serialize: deliver after propagation only
+                push(now + self._prop_ms(s, d), 1, tid, hop)
+            else:
+                active[tid] = True
+                rem[tid] = float(t.nbytes)
+                cur_s[tid], cur_d[tid], cur_hop[tid] = s, d, hop
+                out_cnt[s] += 1
+                in_cnt[d] += 1
+
+        for i in range(m):
+            if indeg[i] == 0:
+                push(transfers[i].compute_ms, 0, i, 0)
+
+        now = 0.0
+        EPS = 1e-9
+        while events or active.any():
+            # next discrete event vs. earliest live-flow drain, under the
+            # current contention (equal share of the busier endpoint NIC)
+            t_evt = events[0][0] if events else np.inf
+            t_drain = np.inf
+            drain_tid = -1
+            a = np.flatnonzero(active)
+            if a.size:
+                c = np.maximum(
+                    np.maximum(out_cnt[cur_s[a]], in_cnt[cur_d[a]]), 1
+                )
+                rates = self.bw[cur_s[a], cur_d[a]] * 1e6 / 8.0 / 1e3 / c
+                t_fin = now + rem[a] / rates
+                i_min = int(t_fin.argmin())
+                t_drain = float(t_fin[i_min])
+                drain_tid = int(a[i_min])
+            t_next = min(t_evt, t_drain)
+            dt = max(t_next - now, 0.0)
+            if dt > 0.0:
+                if a.size:
+                    rem[a] -= rates * dt
+                now = t_next
+            if drain_tid >= 0 and t_drain <= t_evt + EPS:
+                active[drain_tid] = False
+                s, d = int(cur_s[drain_tid]), int(cur_d[drain_tid])
+                out_cnt[s] -= 1
+                in_cnt[d] -= 1
+                push(now + self._prop_ms(s, d), 1, drain_tid,
+                     int(cur_hop[drain_tid]))
+                continue
+            if not events:
+                continue
+            time, _, kind, tid, hop = heapq.heappop(events)
+            now = max(now, time)
+            if kind == 0:
+                begin_hop(now, tid, hop)
+            else:  # delivered
+                if hop + 1 < len(hops[tid]):
+                    begin_hop(now, tid, hop + 1)  # store-and-forward relay
+                    continue
+                finish[tid] = now
+                for c in children[tid]:
+                    if pred[c] < 0 or finish[pred[c]] <= now:
+                        pred[c] = tid
+                    indeg[c] -= 1
+                    if indeg[c] == 0:
+                        push(now + transfers[c].compute_ms, 0, c, 0)
+
+        makespan = float(np.nanmax(finish)) if m else 0.0
+        # critical path: backtrack from the makespan-defining transfer through
+        # each transfer's latest-finishing dependency
+        crit: list[int] = []
+        cur = int(np.nanargmax(finish))
+        while cur >= 0:
+            crit.append(cur)
+            cur = int(pred[cur])
+        crit.reverse()
+        return RoundResult(
+            makespan_ms=makespan,
+            phase_ms=[],
+            bytes_out=bytes_out,
+            bytes_in=bytes_in,
+            msg_matrix=msg,
+            link_bytes=link,
+            n_transfers=m,
+            start_ms=start,
+            finish_ms=finish,
+            critical_path=crit,
         )
 
     # -- bounds ----------------------------------------------------------------

@@ -71,8 +71,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, strategy: str,
 
     rec: dict = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
-        "mesh_shape": mesh_shape, "strategy": strategy, "tier": tier,
-        "smoke": smoke,
+        "mesh_shape": mesh_shape, "strategy": strategy, "density": density,
+        "tier": tier, "smoke": smoke,
         "kind": shape.kind, "param_dtype": str(tcfg.param_dtype.__name__),
         "microbatches": tcfg.microbatches,
     }

@@ -210,6 +210,34 @@ def test_relay_ring_order_scores_direct_hops_by_default():
     assert ControlPlane().ring_tiv is False
 
 
+def test_vivaldi_warmup_seeds_from_direct_rtts():
+    """Monitor-seeded warmup: the first K rounds pay the full mesh, return
+    the direct measurement, and seed the coordinates — after warmup the
+    sparse rounds start near-correct instead of untangling random points."""
+    truth = aws_latency_matrix()
+    warm = VivaldiView(TraceView(truth), samples_per_node=4, verify_every=100,
+                       warmup_rounds=2, seed=0)
+    n = warm.n
+    est = warm.sample()
+    np.testing.assert_allclose(est, truth)          # warmup = direct RTTs
+    assert warm.probe_bytes == n * (n - 1) * PROBE_BYTES
+    warm.sample()
+    assert warm.probe_bytes == 2 * n * (n - 1) * PROBE_BYTES
+    # post-warmup: sparse probing only, and the seeded coordinates are
+    # already accurate (no 100-round fit needed)
+    warm.sample()
+    assert warm.probe_bytes == 2 * n * (n - 1) * PROBE_BYTES \
+        + n * 4 * PROBE_BYTES
+    assert warm.system.median_rel_error(truth) < 0.25
+    # a cold view with the same budget of sparse rounds is strictly worse
+    cold = VivaldiView(TraceView(truth), samples_per_node=4, verify_every=100,
+                       seed=0)
+    for _ in range(3):
+        cold.sample()
+    assert warm.system.median_rel_error(truth) < \
+        cold.system.median_rel_error(truth)
+
+
 # ---------------------------------------------------------------------------
 # ControlPlane: damping, events, force contract
 # ---------------------------------------------------------------------------
@@ -309,6 +337,59 @@ def test_force_replan_with_no_observation_is_noop_without_view():
     cp = ControlPlane(plan_fn=lambda lat: kcenter_grouping(lat, 2))
     assert cp.force_replan() is None
     assert cp.events == []
+
+
+def _mild_square() -> np.ndarray:
+    """(0,1) inflated to 18 ms: trips the per-link detector (>1.5x the 10 ms
+    baseline) but stays under the 20% mean-deviation replan threshold —
+    a link-only signal, no plan change."""
+    mild = SQUARE.copy()
+    mild[0, 1] = mild[1, 0] = 18.0
+    return mild
+
+
+def test_link_only_signal_takes_incremental_2opt_path():
+    mild = _mild_square()
+    frames = [SQUARE] * 2 + [mild] * 3 + [SQUARE] * 3
+    cp, events = _square_plane(frames, replan_sustain=3)
+    for _ in range(len(frames)):
+        cp.step()
+    # the mild spike never replanned (damping contract intact)...
+    assert cp.replan_count == 1
+    assert cp.relay_full_searches == 1        # only the initial global search
+    # ...but the sustained link signal repaired the ring incrementally:
+    # degraded (0,1) pushed it off the perimeter, recovery restored it
+    assert cp.relay_incremental_searches == 2
+    assert cp.relay_incremental_evals > 0
+    orders = [e.order for e in events if isinstance(e, RelayOrderChanged)]
+    assert orders == [(0, 1, 2, 3), (0, 2, 1, 3), (0, 1, 2, 3)]
+    assert all(e.reason == "link-event" for e in events
+               if isinstance(e, RelayOrderChanged) and e.previous is not None)
+
+
+def test_incremental_2opt_skips_moves_off_the_signalled_edge():
+    """The per-edge contract: only moves touching the degraded edge are
+    evaluated.  On an 8-node ring with one off-ring edge degraded, the
+    incremental pass evaluates a strict subset of the full 2-opt
+    neighborhood and leaves the ring unchanged."""
+    rng = np.random.default_rng(5)
+    pos = np.arange(8) * 10.0
+    lat = np.abs(pos[:, None] - pos[None, :])  # line: ring is 0..7
+    lat = lat + rng.uniform(0.0, 1.0, size=lat.shape)
+    lat = (lat + lat.T) / 2.0
+    np.fill_diagonal(lat, 0.0)
+    spiked = lat.copy()
+    spiked[0, 7] = spiked[7, 0] = lat[0, 7] * 1.8   # already the worst hop's
+    frames = [lat] * 2 + [spiked] * 3               # antipodal chord
+    cp, events = _square_plane(frames, replan_sustain=10)
+    for _ in range(len(frames)):
+        cp.step()
+    n = 8
+    full_neighborhood = n * (n - 3) // 2  # all 2-opt moves on an 8-ring
+    assert cp.relay_incremental_searches >= 1
+    per_sweep = cp.relay_incremental_evals / cp.relay_incremental_searches
+    assert per_sweep < full_neighborhood
+    assert cp.relay_full_searches == 1
 
 
 def test_node_failure_flows_through_the_plane():

@@ -1,0 +1,189 @@
+"""Event-driven transmission engine: barrier-exactness, DAG pipelining gains,
+and the pipelined replication engine's consistency guarantees."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    WANSimulator,
+    YCSBConfig,
+    YCSBGenerator,
+    all_to_all_schedule,
+    aws_latency_matrix,
+    geo_clustered_matrix,
+    hierarchical_schedule,
+    jitter_trace,
+)
+from repro.core.planner import kcenter_grouping
+from repro.core.schedule import Transfer, TransmissionSchedule
+
+
+def _old_phase_sum(sim: WANSimulator, sched) -> float:
+    """The pre-refactor simulator loop, reimplemented verbatim: per phase,
+    phase-static degrees, makespan = sum of phase maxima."""
+    total = 0.0
+    for phase in sched.phases:
+        if not phase:
+            continue
+        n = sim.n
+        out_deg = np.zeros(n, dtype=int)
+        in_deg = np.zeros(n, dtype=int)
+        for t in phase:
+            out_deg[t.src] += 1
+            if t.via < 0:
+                in_deg[t.dst] += 1
+            else:
+                in_deg[t.via] += 1
+                out_deg[t.via] += 1
+                in_deg[t.dst] += 1
+        total += max(sim.transfer_time_ms(t, out_deg, in_deg) for t in phase)
+    return total
+
+
+def test_barrier_mode_reproduces_phase_sum_exactly():
+    """Acceptance: WANSimulator(barrier=True) == the pre-refactor numbers."""
+    for seed in range(4):
+        lat, _ = geo_clustered_matrix(
+            GeoClusterSpec(n_nodes=9, n_clusters=3), np.random.default_rng(seed)
+        )
+        plan = kcenter_grouping(lat, 3)
+        sim = WANSimulator(lat, 300.0, barrier=True)
+        for sched in (
+            all_to_all_schedule(9, 250_000.0),
+            hierarchical_schedule(plan, 250_000.0, lat=lat, tiv=True),
+        ):
+            assert sim.run(sched).makespan_ms == _old_phase_sum(sim, sched)
+
+
+def test_event_equals_barrier_on_single_transfer_chain():
+    lat = aws_latency_matrix()
+    sim = WANSimulator(lat, 100.0)
+    chain = TransmissionSchedule(
+        [[Transfer(0, 3, 1e6)], [Transfer(3, 7, 5e5)], [Transfer(7, 1, 2e5)]]
+    )
+    ev = sim.run(chain)
+    ba = sim.run(chain, barrier=True)
+    assert ev.makespan_ms == pytest.approx(ba.makespan_ms)
+    assert ev.critical_path == [0, 1, 2]
+
+
+def test_event_strictly_faster_on_trace_topologies():
+    """Acceptance: strictly lower makespan for hier/geococo on >=2 trace
+    topologies (AWS 10-region + a geo-clustered deployment)."""
+    geo_lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=12, n_clusters=3), np.random.default_rng(3)
+    )
+    for base in (aws_latency_matrix(), geo_lat):
+        n = base.shape[0]
+        plan = kcenter_grouping(base, 3)
+        for lat in jitter_trace(base, 5, np.random.default_rng(1)):
+            sim = WANSimulator(lat, 500.0)
+            for keep in (1.0, 0.4):  # hier (dense) and geococo (filtered)
+                gp = np.array([len(g) * 250_000.0 * keep for g in plan.groups])
+                sched = hierarchical_schedule(
+                    plan, 250_000.0, group_payload_bytes=gp, lat=lat,
+                    tiv=(keep < 1.0),
+                )
+                ev = sim.run(sched).makespan_ms
+                ba = sim.run(sched, barrier=True).makespan_ms
+                assert ev < ba  # strict: stages genuinely overlap
+
+
+def test_compute_stage_overlaps_other_groups_wan():
+    """A group's filter CPU (compute_ms on its exchanges) hides behind other
+    groups' in-flight transfers instead of extending the round serially."""
+    lat = aws_latency_matrix()
+    plan = kcenter_grouping(lat, 3)
+    sim = WANSimulator(lat, 500.0)
+    dense = hierarchical_schedule(plan, 250_000.0)
+    cpu = np.full(plan.k, 10.0)
+    piped = hierarchical_schedule(plan, 250_000.0, group_compute_ms=cpu)
+    m0 = sim.run(dense).makespan_ms
+    m1 = sim.run(piped).makespan_ms
+    assert m0 <= m1 <= m0 + float(cpu.sum())
+    # barrier view ignores compute stages entirely (pre-refactor numbers)
+    assert sim.run(piped, barrier=True).makespan_ms == pytest.approx(
+        sim.run(dense, barrier=True).makespan_ms
+    )
+
+
+def test_critical_path_trace_is_a_dependency_chain():
+    lat = aws_latency_matrix()
+    plan = kcenter_grouping(lat, 3)
+    sched = hierarchical_schedule(plan, 250_000.0, lat=lat, tiv=True)
+    res = WANSimulator(lat, 500.0).run(sched)
+    cp = res.critical_path
+    assert cp and res.finish_ms[cp[-1]] == pytest.approx(res.makespan_ms)
+    for a, b in zip(cp, cp[1:]):
+        assert a in sched.transfers[b].deps
+    # the path crosses stages: a scatter is always the sink of a hier round
+    assert sched.transfers[cp[-1]].tag == "scatter"
+
+
+# ---------------------------------------------------------------------------
+# pipelined replication engine
+# ---------------------------------------------------------------------------
+
+
+def _run_engine(barrier: bool, *, n=5, epochs=10, seed=7):
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=2), np.random.default_rng(1)
+    )
+    trace = jitter_trace(lat, epochs, np.random.default_rng(2))
+    wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    bw = np.where(wan, 200.0, 10_000.0)
+    np.fill_diagonal(bw, np.inf)
+    cfg = EngineConfig(n_nodes=n, barrier=barrier, grouping=True,
+                       filtering=True, tiv=True, planner="kcenter")
+    eng = GeoCluster(cfg, bandwidth_mbps=bw, wan_mask=wan, seed=seed)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=400, theta=0.9, read_ratio=0.3, hot_write_frac=0.3,
+                   hot_locality=True),
+        n, seed=3, node_region=regions,
+    )
+    return eng.run(gen, trace, txns_per_node=8, n_epochs=epochs)
+
+
+def test_pipelined_engine_commits_byte_identical_state():
+    """Acceptance: the pipelined engine's digests match the barrier engine —
+    epoch commit waits for the full DAG to sink, so *when* bytes move never
+    changes *which* bytes commit."""
+    ev = _run_engine(barrier=False)
+    ba = _run_engine(barrier=True)
+    assert ev.state_digest == ba.state_digest
+    assert ev.value_digest == ba.value_digest
+    assert ev.committed == ba.committed
+    # byte/message accounting matches too: both engines rank plans by the
+    # makespan they execute, and on this fixed workload they agree on the
+    # grouping, so the wire traffic is identical transfer-for-transfer
+    assert ev.wan_bytes == pytest.approx(ba.wan_bytes)
+    np.testing.assert_array_equal(ev.msg_matrix, ba.msg_matrix)
+
+
+def test_epoch_stats_split_critical_vs_overlapped():
+    ev = _run_engine(barrier=False)
+    ba = _run_engine(barrier=True)
+    for e in ev.epochs + ba.epochs:  # the identity holds in both engines
+        assert e.sync_overlap_ms >= 0.0
+        assert e.sync_serial_ms == pytest.approx(
+            e.sync_ms + e.sync_overlap_ms
+        )
+    # the pipelined engine demonstrably hid work: its critical path beats
+    # its own serialized reference (barrier phase-sum + back-to-back CPU).
+    # Not compared against ba.makespans_ms directly — measured filter CPU
+    # rides only the event engine's sync_ms, so load spikes during the
+    # timing would make a cross-engine mean comparison flaky; the
+    # serialized reference carries the same measured CPU on both sides.
+    serial = np.array([e.sync_serial_ms for e in ev.epochs])
+    assert ev.makespans_ms.mean() < serial.mean()
+    assert ev.overlap_ms > 0.0
+    # barrier engine reports no overlap by definition
+    assert ba.overlap_ms == 0.0
+
+
+def test_barrier_flag_roundtrips_through_named_strategy():
+    cfg = EngineConfig(n_nodes=4, sync_strategy="geococo", barrier=True)
+    assert cfg.barrier and cfg.grouping and cfg.filtering
