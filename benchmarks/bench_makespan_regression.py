@@ -1,4 +1,5 @@
-"""Makespan regression gate: event-driven DAG engine vs barrier phases.
+"""Makespan regression gate: event-driven DAG engine vs barrier phases,
+plus the cross-epoch streaming gate.
 
 Not a paper figure — a CI tripwire for the transmission-engine refactor.
 On every benchmark topology (the AWS-style 10-region matrix and the two
@@ -9,14 +10,21 @@ phase-sum makespan; and on the trace topologies the pipelined hier/geococo
 rounds must be *strictly* faster — the whole point of dependency-tracked
 transfers is that fast groups' exchanges overlap slow groups' gathers.
 
-NOTE: ``event <= barrier`` is a theorem only for barrier-edged schedules
-(tests/test_property_dag.py); for real dependency edges the greedy ASAP
-start can lose NIC share on adversarial inputs (severely
-bandwidth-starved links — observed around ~6 Mbps on 250 kB payloads).
-This gate is therefore an *empirical* bound on these pinned topologies,
-seeds and constants: every input here is deterministic, so a failure
-means the engine (or this gate's inputs) changed, never run-to-run noise.
-If you change PAYLOAD/BW_MBPS or the topologies, re-establish the bound.
+Since the bandwidth-admission fix, ``event <= barrier`` is a *theorem*
+for every builder DAG (a ready hop defers while an earlier-phase flow
+still occupies its NICs; hypothesis-tested over random matrices in
+tests/test_property_dag.py, adversarial regression in
+tests/test_dag_engine.py).  This gate stays as the deterministic CI
+tripwire on the pinned topologies — a failure means the engine (or this
+gate's inputs) changed, never run-to-run noise — and additionally checks
+that admission did not eat the pipelining *gains* the refactor exists for.
+
+The **streaming gate** runs the full replication engine on each topology
+in both regimes: the stitched cross-epoch simulation
+(``EngineConfig(streaming=True)``) must produce a total wall-clock no
+worse than the ``max(epoch, exec, sync)`` formula on every topology, and
+strictly better on at least one — epoch e+1 gathers streaming under epoch
+e scatters is worth real wall-clock, not just accounting.
 """
 
 from __future__ import annotations
@@ -24,8 +32,12 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import (
+    EngineConfig,
+    GeoCluster,
     GeoClusterSpec,
     WANSimulator,
+    YCSBConfig,
+    YCSBGenerator,
     all_to_all_schedule,
     aws_latency_matrix,
     geo_clustered_matrix,
@@ -39,6 +51,13 @@ from .common import check
 PAYLOAD = 250_000.0  # 250 kB epoch batch per node
 BW_MBPS = 500.0
 FILTER_KEEP = 0.4    # geococo consolidated payload after white-data filtering
+
+# streaming-gate engine settings: WAN-bound rounds (sync >> cadence/exec)
+STREAM_EPOCHS = 8
+STREAM_BW_MBPS = 100.0
+STREAM_EPOCH_MS = 2.0
+STREAM_TXN_EXEC_US = 5.0
+STREAM_TXNS_PER_NODE = 20
 
 
 def _topologies(rng_seed: int = 0) -> dict[str, np.ndarray]:
@@ -66,6 +85,27 @@ def _schedules(lat: np.ndarray, plan) -> dict[str, object]:
             plan, PAYLOAD, group_payload_bytes=gp, lat=lat, tiv=True
         ),
     }
+
+
+def _stream_wall_s(base: np.ndarray, streaming: bool) -> float:
+    """Total simulated wall-clock of the replication engine on one topology
+    (geococo strategy), streaming vs the formula regime.  Deterministic:
+    fixed seeds, fixed trace."""
+    n = base.shape[0]
+    trace = jitter_trace(base, STREAM_EPOCHS, np.random.default_rng(17))
+    cfg = EngineConfig(
+        n_nodes=n, streaming=streaming, grouping=True, filtering=True,
+        tiv=True, planner="kcenter", epoch_ms=STREAM_EPOCH_MS,
+        txn_exec_us=STREAM_TXN_EXEC_US,
+    )
+    eng = GeoCluster(cfg, bandwidth_mbps=STREAM_BW_MBPS, seed=7)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=400, theta=0.9, read_ratio=0.3, hot_write_frac=0.3),
+        n, seed=3,
+    )
+    rs = eng.run(gen, trace, txns_per_node=STREAM_TXNS_PER_NODE,
+                 n_epochs=STREAM_EPOCHS)
+    return rs.wall_s
 
 
 def run(quick: bool = True) -> dict:
@@ -114,20 +154,53 @@ def run(quick: bool = True) -> dict:
         )
         for topo in results
     }
+
+    # cross-epoch streaming gate: measured stitched pipeline vs the formula
+    streaming: dict[str, dict] = {}
+    for topo, base in _topologies().items():
+        formula_s = _stream_wall_s(base, streaming=False)
+        stream_s = _stream_wall_s(base, streaming=True)
+        streaming[topo] = {
+            "formula_wall_s": formula_s,
+            "stream_wall_s": stream_s,
+            "reduction": 1.0 - stream_s / max(formula_s, 1e-12),
+        }
+        print(f"  {topo:>15}/stream   formula {formula_s * 1e3:7.1f} ms"
+              f" -> stream {stream_s * 1e3:7.1f} ms"
+              f"  (-{streaming[topo]['reduction']:.2%})")
+    stream_ok = {t: v["stream_wall_s"] <= v["formula_wall_s"] + 1e-9
+                 for t, v in streaming.items()}
+    stream_strict = {t: v["stream_wall_s"] < v["formula_wall_s"]
+                     for t, v in streaming.items()}
+
     checks = [
         check(not violations,
               "Regression: event-driven makespan never exceeds barrier "
-              "makespan on any benchmark topology/strategy/round",
+              "makespan on any benchmark topology/strategy/round "
+              "(a theorem since the admission fix; gate kept as tripwire)",
               "; ".join(violations[:3]) if violations
               else f"{3 * 3 * rounds} schedule runs compared"),
         check(sum(strict.values()) >= 2,
               "DAG pipelining: hier/geococo strictly faster than barrier "
-              "phases on >=2 trace topologies",
+              "phases on >=2 trace topologies (admission kept the gains)",
               ", ".join(f"{t}={'strict' if v else 'tied'}"
                         for t, v in strict.items())),
+        check(all(stream_ok.values()),
+              "Streaming: stitched cross-epoch wall-clock never exceeds the "
+              "max(epoch, exec, sync) formula on any trace topology",
+              ", ".join(f"{t}={'ok' if v else 'WORSE'}"
+                        for t, v in stream_ok.items())),
+        check(sum(stream_strict.values()) >= 1,
+              "Streaming: strict wall-clock reduction on >=1 trace topology "
+              "(epoch e+1 gathers pipeline under epoch e scatters)",
+              ", ".join(f"{t}=-{streaming[t]['reduction']:.2%}"
+                        for t in streaming)),
     ]
     return {"figure": "makespan-regression", "topologies": results,
-            "strict_reduction": strict, "checks": checks}
+            "strict_reduction": strict, "streaming": streaming,
+            "engine": {"event": "fluid-flow DAG + bandwidth admission",
+                       "streaming": "stitched cross-epoch DAG"},
+            "checks": checks}
 
 
 if __name__ == "__main__":

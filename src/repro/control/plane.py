@@ -195,12 +195,16 @@ class ControlPlane:
         hops ride overlay relays, Sec 5).  ``ring_tiv`` governs the relay
         *ring* search and defaults to False because ``relay_psum`` executes
         direct hops — see :func:`relay_ring_order`.
-    rank_payload_bytes / rank_bandwidth_mbps / barrier:
+    rank_payload_bytes / rank_bandwidth_mbps / barrier / rank_streaming:
         Replan-scoring context for the built-in default planner.  With a
         payload estimate, candidate plans are ranked by the simulated round
         makespan — the event-driven transfer-DAG critical path by default
         (``barrier=True`` scores the legacy phase-sum), so replans reward
-        grouping that overlaps gather/exchange/scatter stages.  Consumers
+        grouping that overlaps gather/exchange/scatter stages.
+        ``rank_streaming=True`` scores two *stitched* epochs instead of one
+        isolated round, so replans additionally reward cross-epoch
+        pipelining (epoch e+1 gathers streaming under epoch e scatters) —
+        the ranking a streaming replication engine executes.  Consumers
         with live context (the replication engine's payload-EWMA planner)
         still override via :meth:`bind_planner`.
     """
@@ -224,7 +228,14 @@ class ControlPlane:
         rank_payload_bytes: float | None = None,
         rank_bandwidth_mbps: float | np.ndarray | None = None,
         barrier: bool = False,
+        rank_streaming: bool = False,
     ):
+        if rank_streaming and barrier:
+            # fail at construction, not mid-run at the first replan
+            raise ValueError(
+                "rank_streaming=True scores the event engine; barrier=True "
+                "has no cross-epoch semantics"
+            )
         self.view = as_view(view) if view is not None else None
         self.tiv = tiv
         self.ring_tiv = ring_tiv
@@ -237,6 +248,7 @@ class ControlPlane:
                 payload_bytes=rank_payload_bytes,
                 bandwidth_mbps=rank_bandwidth_mbps,
                 barrier=barrier,
+                streaming=rank_streaming,
             )
         self.replanner = Replanner(
             plan_fn, threshold=replan_threshold, sustain=replan_sustain

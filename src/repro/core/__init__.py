@@ -44,7 +44,7 @@ from .planner import (
     plan_cost,
     random_grouping,
 )
-from .replication import EngineConfig, GeoCluster, RaftCluster, RunStats
+from .replication import EngineConfig, EpochStats, GeoCluster, RaftCluster, RunStats
 from .schedule import (
     Transfer,
     TransmissionSchedule,
@@ -53,6 +53,7 @@ from .schedule import (
     leader_schedule,
     max_messages_per_node,
     messages_per_node,
+    stitch_schedules,
 )
 from .simulator import RoundResult, WANSimulator
 from .whitedata import (

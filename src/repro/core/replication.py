@@ -10,10 +10,25 @@ setting):
 3. deterministic global validation commits the epoch and all replicas merge
    the committed deltas (CRDT join), producing identical state everywhere.
 
-Throughput model: epochs are pipelined (execution of epoch e+1 overlaps the
-synchronization of epoch e, as in GeoGauss), so the epoch wall-clock time is
-``max(epoch_cadence, execution, synchronization)`` and synchronization
-becomes the bottleneck exactly when WAN latency/bandwidth dominate (Fig. 3).
+Throughput model — two regimes:
+
+* **formula pipelining** (``EngineConfig.streaming=False``, the historical
+  model): epochs overlap only arithmetically — the epoch wall-clock is
+  ``max(epoch_cadence, execution, synchronization)`` (execution of epoch
+  e+1 is assumed to hide under the synchronization of epoch e), and
+  synchronization becomes the bottleneck exactly when WAN latency/bandwidth
+  dominate (Fig. 3).
+* **streaming simulation** (``streaming=True``): consecutive epochs' DAGs
+  are *stitched* (:func:`~repro.core.schedule.stitch_schedules`) — epoch
+  e+1's gathers out of node s depend only on s's epoch-e commit, per-node
+  transaction execution and the epoch cadence ride the DAG as local compute
+  stages — and one event-driven simulation measures real per-epoch commit
+  times.  Epoch e+1's gathers genuinely stream under epoch e's scatters
+  (they ride disjoint NIC directions), as GeoGauss streams multi-master
+  state; ``EpochStats.wall_ms`` is the measured inter-commit gap and
+  ``pipeline_overlap_ms`` is what the formula would have charged on top.
+  Commit content is untouched (validation still waits for every epoch
+  write set), so digests are byte-identical across both regimes.
 
 Within an epoch the synchronization itself is pipelined too (the default,
 ``EngineConfig.barrier=False``): write-set rounds execute as an event-driven
@@ -51,6 +66,7 @@ from .schedule import (
     all_to_all_schedule,
     hierarchical_schedule,
     leader_schedule,
+    stitch_schedules,
 )
 from .simulator import WANSimulator
 from .whitedata import FilterResult, FilterStats, filter_group_batch
@@ -77,6 +93,7 @@ class EngineConfig:
     epoch_ms: float = 10.0
     txn_exec_us: float = 40.0
     barrier: bool = False              # True = pre-DAG barrier-phase engine
+    streaming: bool = False            # True = cross-epoch stitched simulation
     sync_strategy: str | None = None   # named wan_sync preset (overrides booleans)
     grouping: bool = True              # GeoCoCo hierarchical transmission
     filtering: bool = True             # white-data filter at aggregators
@@ -97,6 +114,13 @@ class EngineConfig:
         # booleans of a boolean-configured instance behaves as expected
         # (with sync_strategy set, the name wins on replace — by design;
         # ablate via the booleans or pass sync_strategy=None).
+        if self.streaming and self.barrier:
+            raise ValueError(
+                "streaming=True requires the event engine: cross-epoch "
+                "stitched DAGs have no barrier-phase semantics (set "
+                "barrier=False, or drop streaming for the legacy "
+                "max(epoch, exec, sync) formula)"
+            )
         if self.sync_strategy is not None:
             spec = _strategies.get("wan_sync", self.sync_strategy)
             self.grouping = spec.grouping
@@ -153,12 +177,30 @@ class EpochStats:
     # critical-path vs overlapped split: sync_serial_ms is what a fully
     # serialized round would cost (barrier phase-sum + every group's
     # filter/compress CPU back-to-back), and sync_overlap_ms =
-    # sync_serial_ms - sync_ms is the work the DAG hid.  The barrier engine
+    # sync_serial_ms - sync_ms is the work the DAG hid — an exact identity
+    # (no clamping: with bandwidth admission, event <= barrier + total CPU
+    # is a theorem, so the overlap is never negative).  The barrier engine
     # doesn't model round CPU (pre-refactor semantics; see filter_cpu_ms),
     # so there serial == sync and overlap == 0 — the identity holds in
     # both engines.
     sync_serial_ms: float = 0.0
     sync_overlap_ms: float = 0.0
+    # the honest split of sync_overlap_ms against the per-transfer compute
+    # timeline: sync_cpu_hidden_ms is the filter/compress CPU that ran off
+    # the critical path (hidden behind other groups' in-flight WAN traffic),
+    # sync_wan_overlap_ms = sync_overlap_ms - sync_cpu_hidden_ms is pure
+    # cross-stage WAN overlap (barrier waiting the DAG removed).  Before
+    # this split, compute-dominated rounds reported filter-CPU savings as
+    # "makespan slack" — the two are different resources.
+    sync_cpu_hidden_ms: float = 0.0
+    sync_wan_overlap_ms: float = 0.0
+    # streaming engine only: wall_ms is the measured inter-commit gap in the
+    # stitched multi-epoch simulation (stream_commit_ms is the absolute
+    # commit time); pipeline_overlap_ms = max(epoch_ms, exec_ms, sync_ms) -
+    # wall_ms is the wall-clock the cross-epoch pipeline saved vs the
+    # formula model (negative for epochs paying off an inherited backlog).
+    pipeline_overlap_ms: float = 0.0
+    stream_commit_ms: float = 0.0
 
 
 @dataclasses.dataclass
@@ -213,6 +255,31 @@ class RunStats:
     def overlap_ms(self) -> float:
         """Total CPU/WAN work hidden by the pipelined transmission DAG."""
         return sum(e.sync_overlap_ms for e in self.epochs)
+
+    @property
+    def pipeline_overlap_ms(self) -> float:
+        """Total wall-clock the streaming cross-epoch pipeline saved vs the
+        ``max(epoch, exec, sync)`` formula (0.0 for non-streaming runs)."""
+        return sum(e.pipeline_overlap_ms for e in self.epochs)
+
+
+@dataclasses.dataclass
+class _EpochRound:
+    """The timing-independent product of one epoch: the schedule to time,
+    the commit outcome, and the planning/filtering context the stats need."""
+
+    epoch: int
+    schedule: TransmissionSchedule
+    lat: np.ndarray
+    n_txns: int
+    committed: int
+    aborted: int
+    exec_ms: float
+    node_exec_ms: np.ndarray
+    filter_cpu_ms: float
+    fstats: FilterStats | None
+    plan_method: str
+    modeled_cpu_ms: float
 
 
 def _compressed_size(updates: Sequence[Update], level: int) -> int:
@@ -331,6 +398,7 @@ class GeoCluster:
             bandwidth_mbps=self.bandwidth,
             filter_keep=self._keep_ewma if cfg.filtering else 1.0,
             barrier=cfg.barrier,  # rank plans by the makespan we will execute
+            streaming=cfg.streaming,  # ... incl. cross-epoch pipelining
         )
         self.plan_time_s += time.perf_counter() - t0
         return plan
@@ -349,22 +417,29 @@ class GeoCluster:
 
     # -- one epoch -------------------------------------------------------------
 
-    def run_epoch(
+    def _prepare_epoch(
         self,
         epoch: int,
         txns_by_node: dict[int, list[Txn]],
         lat: np.ndarray,
-    ) -> EpochStats:
+    ) -> "_EpochRound":
+        """Everything timing-independent about one epoch: planning, filtering,
+        schedule construction, deterministic validation and the CRDT commit.
+        The simulator never touches the store, so commit content is identical
+        whichever engine (barrier / event / streaming) later times the round.
+        """
         cfg = self.cfg
         n = cfg.n_nodes
         snapshot = self.store  # epoch-start replicated snapshot
-        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng,
-                           barrier=cfg.barrier)
 
         all_txns = [t for ts in txns_by_node.values() for t in ts]
         n_txns = len(all_txns)
-        exec_ms = max(len(ts) for ts in txns_by_node.values()) * cfg.txn_exec_us / 1e3 \
-            if txns_by_node else 0.0
+        node_exec_ms = np.array(
+            [len(txns_by_node.get(i, [])) * cfg.txn_exec_us / 1e3
+             for i in range(n)],
+            dtype=float,
+        )
+        exec_ms = float(node_exec_ms.max()) if n else 0.0
 
         filter_cpu_ms = 0.0
         fstats: FilterStats | None = None
@@ -467,54 +542,119 @@ class GeoCluster:
             plan_method = "none"
             modeled_cpu_ms = 0.0
 
-        # epoch commit sinks the *full* DAG (every transfer delivered) — the
-        # event engine changes when bytes move, never which bytes commit
-        res = sim.run(schedule)
-        self.msg_matrix += res.msg_matrix
+        # feed filter observations to the bandwidth-aware planner
+        if cfg.grouping and cfg.filtering and fstats is not None and fstats.total_bytes:
+            keep = fstats.wire_bytes / fstats.total_bytes
+            self._keep_ewma = 0.7 * self._keep_ewma + 0.3 * keep
+
+        # deterministic global validation over surviving txns, then CRDT
+        # merge.  Epoch commit sinks the *full* DAG (every transfer
+        # delivered) — the engines change when bytes move, never which
+        # bytes commit, so this is timing-independent.
+        ups, aborted_global = committed_updates(surviving, snapshot)
+        pre_aborted = n_txns - len(surviving)
+        committed = len(surviving) - len(aborted_global)
+        self.store.apply_many(ups)
+
+        return _EpochRound(
+            epoch=epoch,
+            schedule=schedule,
+            lat=np.asarray(lat, dtype=float),
+            n_txns=n_txns,
+            committed=committed,
+            aborted=pre_aborted + len(aborted_global),
+            exec_ms=exec_ms,
+            node_exec_ms=node_exec_ms,
+            filter_cpu_ms=filter_cpu_ms,
+            fstats=fstats,
+            plan_method=plan_method,
+            modeled_cpu_ms=modeled_cpu_ms,
+        )
+
+    def _epoch_stats(
+        self,
+        rnd: "_EpochRound",
+        sim: WANSimulator,
+        res,
+        *,
+        wall_ms: float | None = None,
+        pipeline_overlap_ms: float = 0.0,
+        stream_commit_ms: float = 0.0,
+    ) -> EpochStats:
+        """Assemble one epoch's stats from its (isolated) round simulation."""
+        cfg = self.cfg
+        schedule = rnd.schedule
         if cfg.barrier:
             # the barrier engine doesn't model CPU inside the round at all
             # (pre-refactor semantics; filter_cpu_ms reports it separately),
             # so serial == sync and nothing is hidden
             sync_serial_ms = res.makespan_ms
             sync_overlap_ms = 0.0
+            cpu_hidden_ms = 0.0
+            wan_overlap_ms = 0.0
         else:
             # serialized reference: barrier phase-sum + back-to-back CPU
             # (only the CPU the DAG modeled — phase-sum only, no second
-            # full simulation)
-            sync_serial_ms = sim.barrier_makespan_ms(schedule) + modeled_cpu_ms
-            sync_overlap_ms = max(sync_serial_ms - res.makespan_ms, 0.0)
-
-        # feed filter observations to the bandwidth-aware planner
-        if cfg.grouping and cfg.filtering and fstats is not None and fstats.total_bytes:
-            keep = fstats.wire_bytes / fstats.total_bytes
-            self._keep_ewma = 0.7 * self._keep_ewma + 0.3 * keep
-
-        # deterministic global validation over surviving txns, then CRDT merge
-        ups, aborted_global = committed_updates(surviving, snapshot)
-        pre_aborted = n_txns - len(surviving)
-        committed = len(surviving) - len(aborted_global)
-        self.store.apply_many(ups)
-
-        wall_ms = max(cfg.epoch_ms, exec_ms, res.makespan_ms)
+            # full simulation).  The identity serial == sync + overlap is
+            # exact: with bandwidth admission, event <= barrier + total CPU
+            # is a theorem, so no clamping is needed.
+            sync_serial_ms = sim.barrier_makespan_ms(schedule) + rnd.modeled_cpu_ms
+            sync_overlap_ms = sync_serial_ms - res.makespan_ms
+            # honest CPU/WAN split against the per-transfer timeline: CPU
+            # "on the path" is compute that actually gated a critical-path
+            # transfer's wire start (the gap between its dependencies
+            # sinking and the wire), everything else was hidden behind
+            # other groups' in-flight transfers
+            cpu_on_path_ms = 0.0
+            for i in res.critical_path:
+                t = schedule.transfers[i]
+                if t.compute_ms <= 0.0:
+                    continue
+                ready = max((float(res.finish_ms[d]) for d in t.deps),
+                            default=0.0)
+                gap = max(float(res.start_ms[i]) - ready, 0.0)
+                cpu_on_path_ms += min(t.compute_ms, gap)
+            cpu_hidden_ms = max(rnd.modeled_cpu_ms - cpu_on_path_ms, 0.0)
+            wan_overlap_ms = sync_overlap_ms - cpu_hidden_ms
         if self.wan_mask is not None:
             wan_bytes = float((res.link_bytes * self.wan_mask).sum())
         else:
             wan_bytes = res.total_bytes
+        if wall_ms is None:
+            wall_ms = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
         return EpochStats(
-            epoch=epoch,
-            n_txns=n_txns,
-            committed=committed,
-            aborted=pre_aborted + len(aborted_global),
+            epoch=rnd.epoch,
+            n_txns=rnd.n_txns,
+            committed=rnd.committed,
+            aborted=rnd.aborted,
             sync_ms=res.makespan_ms,
-            exec_ms=exec_ms,
+            exec_ms=rnd.exec_ms,
             wall_ms=wall_ms,
             wan_bytes=wan_bytes,
-            filter_stats=fstats,
-            filter_cpu_ms=filter_cpu_ms,
-            plan_method=plan_method,
+            filter_stats=rnd.fstats,
+            filter_cpu_ms=rnd.filter_cpu_ms,
+            plan_method=rnd.plan_method,
             sync_serial_ms=sync_serial_ms,
             sync_overlap_ms=sync_overlap_ms,
+            sync_cpu_hidden_ms=cpu_hidden_ms,
+            sync_wan_overlap_ms=wan_overlap_ms,
+            pipeline_overlap_ms=pipeline_overlap_ms,
+            stream_commit_ms=stream_commit_ms,
         )
+
+    def run_epoch(
+        self,
+        epoch: int,
+        txns_by_node: dict[int, list[Txn]],
+        lat: np.ndarray,
+    ) -> EpochStats:
+        cfg = self.cfg
+        rnd = self._prepare_epoch(epoch, txns_by_node, lat)
+        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng,
+                           barrier=cfg.barrier)
+        res = sim.run(rnd.schedule)
+        self.msg_matrix += res.msg_matrix
+        return self._epoch_stats(rnd, sim, res)
 
     # -- full run ----------------------------------------------------------------
 
@@ -527,11 +667,15 @@ class GeoCluster:
         n_epochs: int | None = None,
     ) -> RunStats:
         n_epochs = n_epochs if n_epochs is not None else len(trace)
-        epochs: list[EpochStats] = []
-        for e in range(n_epochs):
-            lat = trace[e % len(trace)]
-            txns = generator.epoch_txns(e, txns_per_node, snapshot=self.store)
-            epochs.append(self.run_epoch(e, txns, lat))
+        if self.cfg.streaming:
+            epochs = self._run_streaming(generator, trace, txns_per_node,
+                                         n_epochs)
+        else:
+            epochs = []
+            for e in range(n_epochs):
+                lat = trace[e % len(trace)]
+                txns = generator.epoch_txns(e, txns_per_node, snapshot=self.store)
+                epochs.append(self.run_epoch(e, txns, lat))
         return RunStats(
             epochs=epochs,
             msg_matrix=self.msg_matrix.copy(),
@@ -539,6 +683,63 @@ class GeoCluster:
             state_digest=self.store.digest(),
             value_digest=self.store.digest(values_only=True),
         )
+
+    def _run_streaming(
+        self, generator, trace, txns_per_node: int, n_epochs: int
+    ) -> list[EpochStats]:
+        """Cross-epoch streaming: stitch every epoch's DAG and measure real
+        per-epoch commit times from one event-driven simulation.
+
+        The per-epoch loop still runs each round in isolation — that
+        simulation is the reference the stats are split against (sync_ms,
+        the serial/overlap split, byte accounting) and what
+        ``pipeline_overlap_ms`` compares the measured wall-clock to.
+        Commits are processed inside the loop exactly as in the
+        non-streaming engine, so the final digests are byte-identical.
+        """
+        cfg = self.cfg
+        rounds: list[_EpochRound] = []
+        sims: list[WANSimulator] = []
+        results = []
+        for e in range(n_epochs):
+            lat = trace[e % len(trace)]
+            txns = generator.epoch_txns(e, txns_per_node, snapshot=self.store)
+            rnd = self._prepare_epoch(e, txns, lat)
+            sim = WANSimulator(lat, self.bandwidth, loss=self.loss,
+                               rng=self.rng)
+            res = sim.run(rnd.schedule)
+            self.msg_matrix += res.msg_matrix
+            rounds.append(rnd)
+            sims.append(sim)
+            results.append(res)
+        if not rounds:
+            return []
+
+        stitched = stitch_schedules(
+            [r.schedule for r in rounds],
+            node_exec_ms=[r.node_exec_ms for r in rounds],
+            epoch_ms=cfg.epoch_ms,
+            n=cfg.n_nodes,
+        )
+        stream_sim = WANSimulator(rounds[0].lat, self.bandwidth,
+                                  loss=self.loss, rng=self.rng)
+        stream = stream_sim.run(stitched, lats=[r.lat for r in rounds])
+
+        epoch_of = np.array([t.epoch for t in stitched.transfers])
+        epochs: list[EpochStats] = []
+        prev_commit = 0.0
+        for k, (rnd, sim, res) in enumerate(zip(rounds, sims, results)):
+            commit = float(stream.finish_ms[epoch_of == k].max())
+            wall = commit - prev_commit
+            prev_commit = commit
+            formula = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
+            epochs.append(self._epoch_stats(
+                rnd, sim, res,
+                wall_ms=wall,
+                pipeline_overlap_ms=formula - wall,
+                stream_commit_ms=commit,
+            ))
+        return epochs
 
 
 # ---------------------------------------------------------------------------
@@ -554,6 +755,17 @@ class RaftCluster:
     group to the aggregator, which relays to members; acks travel back the
     same path.  Quorum semantics are unchanged (the paper's non-intrusive
     integration).
+
+    Commit latency runs the replication fan-out through the **event-driven
+    simulator** (``leader_schedule`` -> per-follower delivery times + ack
+    propagation back): with constrained bandwidth the leader's NIC
+    serializes its appends, so the quorum time reflects contention — the
+    closed-form hop sums (kept as a private reference) charge every hop an
+    uncontended wire and agree with the event engine exactly on
+    contention-free (infinite-bandwidth) matrices.  Results are memoized
+    per ``(latency matrix, leader, payload)`` — one epoch's batches all see
+    the same network, so per-txn recomputation was pure waste (the plan
+    search is also cached per matrix).
     """
 
     def __init__(
@@ -574,44 +786,96 @@ class RaftCluster:
         self.bandwidth = bandwidth_mbps
         self.loss = loss
         self.rng = np.random.default_rng(seed)
+        self._commit_cache: dict[tuple, float] = {}
+        self._plan_cache: dict[bytes, "GroupPlan"] = {}
+        self.commit_cache_hits = 0
+
+    # -- quorum helpers --------------------------------------------------------
+
+    def _ack_ms(self, lat: np.ndarray) -> np.ndarray:
+        """Per-node ack-return latency to the leader's column: TIV-effective
+        on the grouped (overlay) path, direct otherwise — matching the
+        deployment (Sec 5 deploys relays on the grouped WAN paths)."""
+        from .latency import one_relay_effective
+
+        if self.grouping and self.tiv:
+            eff, _ = one_relay_effective(lat, margin=0.05)
+            return eff
+        return lat
+
+    def _plan(self, lat: np.ndarray, key: bytes) -> "GroupPlan":
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            from .planner import best_plan
+
+            plan = best_plan(lat, tiv=self.tiv, method=self.planner)
+            self._plan_cache[key] = plan
+        return plan
 
     def commit_latency_ms(
         self, lat: np.ndarray, leader: int, payload_bytes: float
     ) -> float:
-        """Latency for one replicated batch to reach majority quorum."""
-        from .latency import one_relay_effective
+        """Latency for one replicated batch to reach majority quorum,
+        measured by the event engine (memoized per matrix/leader/payload)."""
+        lat = np.asarray(lat, dtype=float)
+        mat_key = lat.tobytes()
+        key = (mat_key, int(leader), float(payload_bytes))
+        hit = self._commit_cache.get(key)
+        if hit is not None:
+            self.commit_cache_hits += 1
+            return hit
+        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng)
+        plan = self._plan(lat, mat_key) if self.grouping else None
+        sched = leader_schedule(self.n, leader, payload_bytes, plan)
+        res = sim.run(sched)
+        ack = self._ack_ms(lat)
+        times = [
+            float(res.finish_ms[i]) + float(ack[t.dst, leader])
+            for i, t in enumerate(sched.transfers)
+            if t.dst != leader
+        ]
+        times.sort()
+        quorum = self.n // 2  # leader + quorum followers = majority
+        val = float(times[quorum - 1]) if quorum >= 1 else 0.0
+        self._commit_cache[key] = val
+        return val
 
+    def _closed_form_commit_latency_ms(
+        self, lat: np.ndarray, leader: int, payload_bytes: float
+    ) -> float:
+        """The pre-event-engine hop-sum model, kept as the contention-free
+        reference: every hop pays propagation + an *uncontended* wire, so it
+        matches the event engine exactly when bandwidth is infinite (and
+        undercounts the leader's NIC serialization otherwise).  Mirrors
+        ``leader_schedule``'s paths: the leader relays directly to its own
+        group's members."""
         n = self.n
         sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng)
-        eff = lat
-        if self.tiv:
-            eff, _ = one_relay_effective(lat, margin=0.05)
-        if not self.grouping:
-            # direct fan-out; ack latency = one-way back
-            times = []
-            for f in range(n):
-                if f == leader:
-                    continue
-                t = sim._hop_time(leader, f, payload_bytes) + lat[f, leader]
-                times.append(t)
-            times.sort()
-            quorum = n // 2  # leader + quorum followers = majority
-            return float(times[quorum - 1]) if quorum >= 1 else 0.0
-        # grouped relay
-        from .planner import best_plan
-
-        plan = best_plan(lat, tiv=self.tiv, method=self.planner)
+        ack = self._ack_ms(lat)
         times = []
-        for g, a in zip(plan.groups, plan.aggregators):
-            first = sim._hop_time(leader, a, payload_bytes) if a != leader else 0.0
-            for f in g:
-                if f == leader:
-                    continue
-                hop = 0.0 if f == a else sim._hop_time(a, f, payload_bytes)
-                back = eff[f, leader]
-                times.append(first + hop + back)
+        if not self.grouping:
+            for f in range(n):
+                if f != leader:
+                    times.append(
+                        sim._hop_time(leader, f, payload_bytes)
+                        + ack[f, leader]
+                    )
+        else:
+            plan = self._plan(np.asarray(lat, dtype=float),
+                              np.asarray(lat, dtype=float).tobytes())
+            for g, a in zip(plan.groups, plan.aggregators):
+                tgt = a if leader not in g else leader
+                first = (
+                    sim._hop_time(leader, tgt, payload_bytes)
+                    if tgt != leader else 0.0
+                )
+                for f in g:
+                    if f == leader:
+                        continue
+                    hop = 0.0 if f == tgt else sim._hop_time(tgt, f, payload_bytes)
+                    times.append(first + hop + ack[f, leader])
         times.sort()
-        quorum = self.n // 2
+        quorum = n // 2
         return float(times[quorum - 1]) if quorum >= 1 else 0.0
 
     def throughput(

@@ -48,6 +48,7 @@ __all__ = [
     "all_to_all_schedule",
     "hierarchical_schedule",
     "leader_schedule",
+    "stitch_schedules",
     "messages_per_node",
     "max_messages_per_node",
 ]
@@ -69,6 +70,14 @@ class Transfer:
     after the dependencies are met and before the wire — the pipelined
     replication engine uses it to model per-group filter/compression time
     that overlaps other groups' in-flight WAN transfers.
+
+    ``src == dst`` marks a **local compute stage** (no wire, no NIC, no
+    byte/message accounting): the streaming multi-epoch engine models
+    per-node transaction execution and the epoch cadence clock this way.
+
+    ``epoch`` tags the transfer's position in a stitched multi-epoch
+    schedule (see :func:`stitch_schedules`); the event simulator resolves
+    per-epoch propagation from it when given a latency-matrix stack.
     """
 
     src: int
@@ -78,6 +87,7 @@ class Transfer:
     tag: str = ""
     deps: tuple[int, ...] = ()
     compute_ms: float = 0.0
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -340,6 +350,100 @@ def leader_schedule(
     )
 
 
+# ---------------------------------------------------------------------------
+# Cross-epoch streaming (GeoGauss-style pipelining of consecutive rounds)
+# ---------------------------------------------------------------------------
+
+
+def stitch_schedules(
+    rounds: Sequence[TransmissionSchedule],
+    *,
+    node_exec_ms: Sequence[Sequence[float]] | None = None,
+    epoch_ms: float = 0.0,
+    n: int | None = None,
+    label: str = "stream",
+) -> TransmissionSchedule:
+    """Stitch consecutive epochs' DAGs into one streaming schedule.
+
+    The key property (the GeoGauss streaming model, paper Sec 2.1): epoch
+    ``e+1``'s transfers out of node ``s`` depend only on **node s's epoch-e
+    commit** — the delivery of every epoch-e transfer *into s* — never on a
+    global epoch sink.  A node whose scatter arrived early executes and
+    gathers epoch ``e+1`` while other nodes' epoch-e scatters are still in
+    flight, so consecutive WAN rounds pipeline.
+
+    Per epoch ``k`` the stitched DAG gains two kinds of local compute stages
+    (``src == dst`` transfers — no wire, no accounting):
+
+    * a ``clock`` chain (when ``epoch_ms > 0``): epoch ``k``'s execution
+      cannot start before ``k * epoch_ms`` — transactions arrive at the
+      epoch cadence, not earlier;
+    * one ``exec`` stage per node: ``compute_ms = node_exec_ms[k][i]`` —
+      node i's local transaction execution for epoch ``k``, after its
+      epoch-``k-1`` commit and its own epoch-``k-1`` exec stage (a node
+      executes epochs serially).  Every epoch-``k`` wire transfer with
+      source ``i`` depends on it.
+
+    Admission ranks (``phase_of``) are offset per epoch, so the event
+    engine's bandwidth admission keeps epoch ``e+1`` exchanges from starving
+    epoch-e scatters on a shared NIC while leaving the gather/scatter
+    overlap intact (gathers ride member->aggregator NIC directions that
+    scatters never touch).
+    """
+    if n is None:
+        n = 0
+        for sk in rounds:
+            for t in sk.transfers:
+                n = max(n, t.src + 1, t.dst + 1, t.via + 1)
+        if node_exec_ms is not None:
+            for row in node_exec_ms:
+                n = max(n, len(row))
+    if n <= 0:
+        raise ValueError("cannot infer node count from empty schedules")
+
+    flat: list[Transfer] = []
+    ranks: list[int] = []
+    prev_commit: dict[int, list[int]] = {i: [] for i in range(n)}
+    prev_exec: dict[int, int] = {}
+    prev_clock: int | None = None
+    rank_base = 0
+    for k, sk in enumerate(rounds):
+        if epoch_ms > 0.0 and k >= 1:
+            clock_deps = () if prev_clock is None else (prev_clock,)
+            prev_clock = len(flat)
+            flat.append(Transfer(0, 0, 0.0, tag="clock", deps=clock_deps,
+                                 compute_ms=float(epoch_ms), epoch=k))
+            ranks.append(rank_base)
+        exec_idx: dict[int, int] = {}
+        for i in range(n):
+            deps: list[int] = []
+            if prev_clock is not None:
+                deps.append(prev_clock)
+            if i in prev_exec:
+                deps.append(prev_exec[i])
+            deps.extend(prev_commit[i])
+            cms = 0.0
+            if node_exec_ms is not None and i < len(node_exec_ms[k]):
+                cms = float(node_exec_ms[k][i])
+            exec_idx[i] = len(flat)
+            flat.append(Transfer(i, i, 0.0, tag="exec", deps=tuple(deps),
+                                 compute_ms=cms, epoch=k))
+            ranks.append(rank_base + 1)
+        off = len(flat)
+        rk = list(sk.phase_of) if sk.phase_of is not None else sk.dep_levels()
+        commit: dict[int, list[int]] = {i: [] for i in range(n)}
+        for j, t in enumerate(sk.transfers):
+            deps = tuple(d + off for d in t.deps) + (exec_idx[t.src],)
+            if t.src != t.dst:
+                commit[t.dst].append(len(flat))
+            flat.append(dataclasses.replace(t, deps=deps, epoch=k))
+            ranks.append(rank_base + 2 + rk[j])
+        prev_commit = commit
+        prev_exec = exec_idx
+        rank_base += 2 + (max(rk) + 1 if rk else 0)
+    return TransmissionSchedule(flat, label=label, phase_of=tuple(ranks))
+
+
 # registry wiring: transmission-schedule builders are addressable by name so
 # the engine (and future planes: Raft, multi-cloud) resolve them uniformly
 _strategies.register("schedule", "all_to_all", all_to_all_schedule)
@@ -353,9 +457,12 @@ _strategies.register("schedule", "leader", leader_schedule)
 
 
 def messages_per_node(schedule: TransmissionSchedule, n: int) -> np.ndarray:
-    """Total messages (sends + receives, relays counted) per node."""
+    """Total messages (sends + receives, relays counted) per node.  Local
+    compute stages (``src == dst``) put nothing on the wire."""
     cnt = np.zeros(n, dtype=int)
     for t in schedule.all_transfers():
+        if t.src == t.dst:
+            continue
         cnt[t.src] += 1
         cnt[t.dst] += 1
         if t.via >= 0:

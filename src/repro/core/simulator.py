@@ -19,6 +19,31 @@ Two execution engines over the same wire model:
   :class:`RoundResult` exposes via per-transfer start/finish times and a
   backtracked critical-path trace.
 
+  **Bandwidth admission** (``admission=True``, the default): a ready hop is
+  *deferred* while either of its NICs still carries undrained flows of a
+  strictly earlier phase rank — a later-phase exchange/scatter can never
+  steal NIC bandwidth from an earlier phase's still-running gathers.  With
+  admission, at any instant the byte-moving flows on a directed NIC all
+  share one phase rank and never outnumber that phase's static degree, so
+  every flow runs at least as fast as its barrier-static estimate and
+  ``event <= barrier`` is a *theorem* for any schedule whose dependencies
+  point at strictly earlier phases (all builders; property-tested in
+  ``tests/test_property_dag.py``).  ``admission=False`` restores the
+  greedy ASAP start, which on adversarial matrices (severely
+  bandwidth-starved links) can exceed the barrier phase-sum.
+
+Transfers with ``src == dst`` are **local compute stages** (the streaming
+multi-epoch engine's per-node execution stages): they occupy no NIC, move
+no bytes, take ``compute_ms`` after their dependencies, and are excluded
+from byte/message accounting in both engines.
+
+For stitched multi-epoch schedules (:func:`~repro.core.schedule.stitch_schedules`)
+the event engine accepts ``run(schedule, lats=[lat_0, lat_1, ...])``: each
+transfer's propagation is taken from its epoch's latency matrix (the trace
+the replication engine iterates), while bandwidth/loss stay constructor-
+fixed.  The barrier engine rejects latency stacks — cross-epoch streaming
+has no barrier-phase semantics.
+
 * **barrier** (``barrier=True``): the pre-DAG semantics, kept for regression
   comparison.  Phases (the schedule's derived compatibility view) are
   barrier-synchronized; within a phase each flow is charged the phase-static
@@ -47,6 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from typing import Sequence
 
 import numpy as np
 
@@ -86,7 +112,9 @@ class WANSimulator:
     numbers); the default runs the event-driven DAG engine.  Byte, message
     and link accounting are identical across both engines — only timing
     differs — so consistency checks (digests, WAN-byte counters) are
-    engine-independent.
+    engine-independent.  ``admission=False`` disables the event engine's
+    bandwidth-admission heuristic (greedy ASAP starts, the pre-fix
+    behavior — kept for the adversarial regression tests and ablation).
     """
 
     def __init__(
@@ -99,6 +127,7 @@ class WANSimulator:
         rng: np.random.Generator | None = None,
         stochastic_loss: bool = False,
         barrier: bool = False,
+        admission: bool = True,
     ):
         self.lat = np.asarray(latency_ms, dtype=float)
         n = self.lat.shape[0]
@@ -110,11 +139,12 @@ class WANSimulator:
         self.rng = rng or np.random.default_rng(0)
         self.stochastic_loss = stochastic_loss
         self.barrier = barrier
+        self.admission = admission
 
     # -- single-hop cost -----------------------------------------------------
 
-    def _prop_ms(self, s: int, d: int) -> float:
-        prop = self.lat[s, d]
+    def _prop_ms(self, s: int, d: int, lat: np.ndarray | None = None) -> float:
+        prop = (self.lat if lat is None else lat)[s, d]
         p = float(self.loss[s, d])
         if p > 0.0:
             if self.stochastic_loss:
@@ -141,6 +171,8 @@ class WANSimulator:
                 return 1.0
             return float(max(out_deg[s], in_deg[d], 1))
 
+        if t.src == t.dst:
+            return 0.0  # local compute stage: no wire (barrier ignores CPU)
         if t.via < 0:
             return self._hop_time(t.src, t.dst, t.nbytes, c(t.src, t.dst))
         return self._hop_time(
@@ -156,6 +188,8 @@ class WANSimulator:
         msg = np.zeros((n, n), dtype=int)
         link = np.zeros((n, n))
         for t in schedule.all_transfers():
+            if t.src == t.dst:
+                continue  # local compute stage: nothing on the wire
             if t.via < 0:
                 bytes_out[t.src] += t.nbytes
                 bytes_in[t.dst] += t.nbytes
@@ -175,10 +209,19 @@ class WANSimulator:
     # -- full round ----------------------------------------------------------
 
     def run(self, schedule: TransmissionSchedule,
-            barrier: bool | None = None) -> RoundResult:
+            barrier: bool | None = None,
+            lats: Sequence[np.ndarray] | None = None) -> RoundResult:
+        """Execute the schedule.  ``lats`` (a per-epoch latency-matrix list
+        for stitched multi-epoch schedules; each transfer's propagation is
+        taken from ``lats[transfer.epoch]``) is event-engine only."""
         if barrier if barrier is not None else self.barrier:
+            if lats is not None:
+                raise ValueError(
+                    "per-epoch latency stacks require the event engine: "
+                    "cross-epoch streaming has no barrier-phase semantics"
+                )
             return self._run_barrier(schedule)
-        return self._run_event(schedule)
+        return self._run_event(schedule, lats=lats)
 
     # -- barrier engine (pre-DAG phase-sum semantics) --------------------------
 
@@ -188,6 +231,8 @@ class WANSimulator:
         out_deg = np.zeros(self.n, dtype=int)
         in_deg = np.zeros(self.n, dtype=int)
         for t in phase:
+            if t.src == t.dst:
+                continue  # local compute stage: no NIC
             if t.via < 0:
                 out_deg[t.src] += 1
                 in_deg[t.dst] += 1
@@ -253,7 +298,25 @@ class WANSimulator:
 
     # -- event-driven engine (fluid-flow DAG simulation) -----------------------
 
-    def _run_event(self, schedule: TransmissionSchedule) -> RoundResult:
+    def _admission_ranks(self, schedule: TransmissionSchedule) -> np.ndarray:
+        """Per-transfer admission rank: the builder-recorded positional phase,
+        repaired to be strictly increasing along dependency edges (so a hop
+        never waits on a rank that could wait back — admission cannot
+        deadlock).  Falls back to ASAP dependency levels without phases."""
+        base = schedule.phase_of
+        rank = np.zeros(schedule.n_transfers, dtype=int)
+        for i, t in enumerate(schedule.transfers):
+            r = 0
+            for d in t.deps:
+                if rank[d] + 1 > r:
+                    r = rank[d] + 1
+            if base is not None and base[i] > r:
+                r = int(base[i])
+            rank[i] = r
+        return rank
+
+    def _run_event(self, schedule: TransmissionSchedule,
+                   lats: Sequence[np.ndarray] | None = None) -> RoundResult:
         transfers = schedule.transfers
         m = len(transfers)
         bytes_out, bytes_in, msg, link = self._account(schedule)
@@ -262,6 +325,19 @@ class WANSimulator:
                 makespan_ms=0.0, phase_ms=[], bytes_out=bytes_out,
                 bytes_in=bytes_in, msg_matrix=msg, link_bytes=link,
                 n_transfers=0, start_ms=np.zeros(0), finish_ms=np.zeros(0),
+            )
+
+        stack = None
+        if lats is not None:
+            stack = [np.asarray(l, dtype=float) for l in lats]
+
+        def prop_ms(tid: int, s: int, d: int) -> float:
+            if s == d:
+                return 0.0  # local compute stage
+            if stack is None:
+                return self._prop_ms(s, d)
+            return self._prop_ms(
+                s, d, lat=stack[min(transfers[tid].epoch, len(stack) - 1)]
             )
 
         hops = [  # per transfer: the 1 or 2 (src, dst) wire hops
@@ -273,6 +349,39 @@ class WANSimulator:
         for i, t in enumerate(transfers):
             for d in t.deps:
                 children[d].append(i)
+
+        # bandwidth admission: register every byte-moving hop on its NICs up
+        # front, bucketed by admission rank.  A ready hop starts only when no
+        # *undrained* lower-rank hop shares its src out-NIC or dst in-NIC —
+        # arrival order is irrelevant, so per NIC the live flows always share
+        # one rank and never exceed that phase's static degree (the invariant
+        # behind the event <= barrier theorem).
+        rank = self._admission_ranks(schedule) if self.admission else None
+        if rank is not None:
+            n_ranks = int(rank.max()) + 1
+            pend_out = np.zeros((self.n, n_ranks), dtype=int)
+            pend_in = np.zeros((self.n, n_ranks), dtype=int)
+            for i, t in enumerate(transfers):
+                if t.src == t.dst or t.nbytes <= 0.0:
+                    continue
+                for s, d in hops[i]:
+                    if np.isfinite(self.bw[s, d]):
+                        pend_out[s, rank[i]] += 1
+                        pend_in[d, rank[i]] += 1
+            # cached min pending rank per directed NIC (only ever advances:
+            # all hops are registered up front and only drains decrement)
+            min_out = np.zeros(self.n, dtype=int)
+            min_in = np.zeros(self.n, dtype=int)
+
+            def _advance(pend, mins, node):
+                while mins[node] < n_ranks and pend[node, mins[node]] == 0:
+                    mins[node] += 1
+
+            for node in range(self.n):
+                _advance(pend_out, min_out, node)
+                _advance(pend_in, min_in, node)
+
+        parked: list[tuple[int, int]] = []  # hops deferred by admission
 
         start = np.full(m, np.nan)      # wire start (after deps + compute)
         finish = np.full(m, np.nan)     # delivery of the final hop at dst
@@ -298,18 +407,25 @@ class WANSimulator:
 
         def begin_hop(now: float, tid: int, hop: int):
             s, d = hops[tid][hop]
+            t = transfers[tid]
+            if s == d or t.nbytes <= 0.0 or not np.isfinite(self.bw[s, d]):
+                # nothing to serialize: deliver after propagation only
+                if hop == 0:
+                    start[tid] = now
+                push(now + prop_ms(tid, s, d), 1, tid, hop)
+                return
+            if rank is not None and (
+                min_out[s] < rank[tid] or min_in[d] < rank[tid]
+            ):
+                parked.append((tid, hop))  # dst/src NIC busy with earlier phase
+                return
             if hop == 0:
                 start[tid] = now
-            t = transfers[tid]
-            if t.nbytes <= 0.0 or not np.isfinite(self.bw[s, d]):
-                # nothing to serialize: deliver after propagation only
-                push(now + self._prop_ms(s, d), 1, tid, hop)
-            else:
-                active[tid] = True
-                rem[tid] = float(t.nbytes)
-                cur_s[tid], cur_d[tid], cur_hop[tid] = s, d, hop
-                out_cnt[s] += 1
-                in_cnt[d] += 1
+            active[tid] = True
+            rem[tid] = float(t.nbytes)
+            cur_s[tid], cur_d[tid], cur_hop[tid] = s, d, hop
+            out_cnt[s] += 1
+            in_cnt[d] += 1
 
         for i in range(m):
             if indeg[i] == 0:
@@ -344,8 +460,20 @@ class WANSimulator:
                 s, d = int(cur_s[drain_tid]), int(cur_d[drain_tid])
                 out_cnt[s] -= 1
                 in_cnt[d] -= 1
-                push(now + self._prop_ms(s, d), 1, drain_tid,
+                push(now + prop_ms(drain_tid, s, d), 1, drain_tid,
                      int(cur_hop[drain_tid]))
+                if rank is not None:
+                    r = int(rank[drain_tid])
+                    pend_out[s, r] -= 1
+                    pend_in[d, r] -= 1
+                    _advance(pend_out, min_out, s)
+                    _advance(pend_in, min_in, d)
+                    if parked:
+                        # the drain may have unblocked deferred hops; ready
+                        # ones start now, the rest re-park inside begin_hop
+                        pk, parked[:] = list(parked), []
+                        for tid2, hop2 in pk:
+                            begin_hop(now, tid2, hop2)
                 continue
             if not events:
                 continue
@@ -365,6 +493,10 @@ class WANSimulator:
                     if indeg[c] == 0:
                         push(now + transfers[c].compute_ms, 0, c, 0)
 
+        if parked:  # unreachable: ranks strictly increase along deps
+            raise RuntimeError(
+                f"admission deadlock: {len(parked)} hops still parked"
+            )
         makespan = float(np.nanmax(finish)) if m else 0.0
         # critical path: backtrack from the makespan-defining transfer through
         # each transfer's latest-finishing dependency

@@ -123,6 +123,64 @@ def test_critical_path_trace_is_a_dependency_chain():
     assert sched.transfers[cp[-1]].tag == "scatter"
 
 
+def _adversarial_case():
+    """The concrete adversarial input from the PR-3 follow-up (found by the
+    test_property_dag brute force): a random symmetric WAN with a severely
+    bandwidth-starved access link, where the greedy ASAP event engine lets a
+    fast group's exchange steal NIC bandwidth from the other group's
+    still-running gathers and LOSES to the barrier phase-sum."""
+    rng = np.random.default_rng(0)
+    a = rng.uniform(1.0, 200.0, size=(5, 5))
+    lat = (a + a.T) / 2.0
+    np.fill_diagonal(lat, 0.0)
+    plan = kcenter_grouping(lat, 2)
+    gp = np.array([len(g) * 250_000.0 * 0.4 for g in plan.groups])
+    sched = hierarchical_schedule(
+        plan, 250_000.0, group_payload_bytes=gp, lat=lat, tiv=True
+    )
+    return lat, sched
+
+
+def test_greedy_event_engine_loses_on_adversarial_matrix():
+    """Regression pin for the pre-fix unsoundness: without bandwidth
+    admission, event > barrier on the adversarial matrix (if this starts
+    failing, the greedy engine quietly changed and the admission fix may no
+    longer be load-bearing — re-establish the adversarial input)."""
+    lat, sched = _adversarial_case()
+    for bw in (4.0, 6.0, 10.0):
+        greedy = WANSimulator(lat, bw, admission=False).run(sched).makespan_ms
+        barrier = WANSimulator(lat, bw).run(sched, barrier=True).makespan_ms
+        assert greedy > barrier + 1e-6
+
+
+def test_admission_restores_event_le_barrier_on_adversarial_matrix():
+    """The bugfix: with bandwidth admission (the default), a later-phase
+    exchange defers while its dst NIC is saturated by earlier-phase gathers,
+    and event <= barrier holds on the exact matrix where greedy loses."""
+    lat, sched = _adversarial_case()
+    for bw in (4.0, 6.0, 10.0):
+        sim = WANSimulator(lat, bw)
+        ev = sim.run(sched).makespan_ms
+        ba = sim.run(sched, barrier=True).makespan_ms
+        assert ev <= ba + 1e-6
+
+
+def test_admission_preserves_timeline_and_accounting():
+    """Admission only defers starts: dependency ordering, the critical-path
+    chain and the engine-independent byte accounting all survive."""
+    lat, sched = _adversarial_case()
+    sim = WANSimulator(lat, 6.0)
+    res = sim.run(sched)
+    ba = sim.run(sched, barrier=True)
+    for i, t in enumerate(sched.transfers):
+        for d in t.deps:
+            assert res.start_ms[i] >= res.finish_ms[d] - 1e-9
+    cp = res.critical_path
+    assert cp and res.finish_ms[cp[-1]] == pytest.approx(res.makespan_ms)
+    np.testing.assert_allclose(res.bytes_out, ba.bytes_out)
+    np.testing.assert_array_equal(res.msg_matrix, ba.msg_matrix)
+
+
 # ---------------------------------------------------------------------------
 # pipelined replication engine
 # ---------------------------------------------------------------------------
@@ -168,9 +226,19 @@ def test_epoch_stats_split_critical_vs_overlapped():
     ba = _run_engine(barrier=True)
     for e in ev.epochs + ba.epochs:  # the identity holds in both engines
         assert e.sync_overlap_ms >= 0.0
+        # exact (unclamped) identity: with bandwidth admission the event
+        # makespan never exceeds barrier + modeled CPU, so the overlap is
+        # non-negative by theorem, not by clipping
         assert e.sync_serial_ms == pytest.approx(
-            e.sync_ms + e.sync_overlap_ms
+            e.sync_ms + e.sync_overlap_ms, abs=1e-9
         )
+        # the honest split: filter-CPU hidden behind other groups' WAN vs
+        # pure cross-stage WAN overlap — compute-dominated rounds no longer
+        # report CPU savings as makespan slack
+        assert e.sync_overlap_ms == pytest.approx(
+            e.sync_cpu_hidden_ms + e.sync_wan_overlap_ms, abs=1e-9
+        )
+        assert e.sync_cpu_hidden_ms >= 0.0
     # the pipelined engine demonstrably hid work: its critical path beats
     # its own serialized reference (barrier phase-sum + back-to-back CPU).
     # Not compared against ba.makespans_ms directly — measured filter CPU

@@ -1,12 +1,22 @@
 """Hypothesis property tests for the event-driven transfer-DAG simulator.
 
-The load-bearing invariant of the transmission-engine refactor: on any
-schedule whose dependencies encode the barrier semantics (the legacy
-list-of-phases constructor installs full barrier edges), the event-driven
-fluid-flow engine can only *remove* waiting — contention degrees shrink as
-flows drain, phases never start later than the barrier — so its makespan is
-bounded above by the barrier phase-sum, with equality when every phase holds
-a single transfer (nothing to overlap, contention 1 throughout).
+The load-bearing invariant of the transmission-engine refactor:
+``event <= barrier`` — the event-driven fluid-flow engine can only *remove*
+waiting relative to the barrier phase-sum.  With **bandwidth admission**
+(a ready hop defers while an earlier-phase flow still occupies its src
+out-NIC or dst in-NIC) this is a theorem for *every* schedule whose
+dependencies point at strictly earlier phases: at any instant a directed
+NIC carries flows of one phase rank only, never more than that phase's
+static degree, so every flow runs at least at its barrier-static rate and
+every phase-``p`` hop starts by the barrier phase-``p`` start time.
+
+That covers both the legacy list-of-phases constructor (full barrier
+edges) *and* all real builder DAGs (gather -> exchange -> scatter
+dependency edges, relays, filtered payloads) — the builder-DAG half used
+to hold only empirically on the benchmark topologies, because greedy ASAP
+starts could steal NIC bandwidth from another group's still-running
+gathers (the admission bugfix; the concrete adversarial matrix is
+regression-tested in ``tests/test_dag_engine.py``).
 """
 
 import numpy as np
@@ -18,7 +28,14 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.planner import kcenter_grouping
-from repro.core.schedule import Transfer, TransmissionSchedule, hierarchical_schedule
+from repro.core.schedule import (
+    Transfer,
+    TransmissionSchedule,
+    all_to_all_schedule,
+    hierarchical_schedule,
+    leader_schedule,
+    stitch_schedules,
+)
 from repro.core.simulator import WANSimulator
 
 
@@ -96,17 +113,100 @@ def test_event_timeline_is_consistent(case):
         assert a in sched.transfers[b].deps
 
 
+@st.composite
+def builder_dags(draw):
+    """A random *builder* schedule (real dependency edges, no barrier
+    chain) + matching network — the promoted domain of the event <= barrier
+    property now that bandwidth admission makes it a theorem for dep-edged
+    DAGs too.  Bandwidths deliberately include the severely starved band
+    (~2-10 Mbps on 250 kB payloads) where the greedy pre-fix engine loses."""
+    n = draw(st.integers(3, 9))
+    seed = draw(st.integers(0, 10_000))
+    lat = _lat_matrix(n, seed)
+    bw = draw(st.sampled_from([np.inf, 500.0, 100.0, 10.0, 6.0, 2.0]))
+    pay = draw(st.sampled_from([10_000.0, 250_000.0, 1e6]))
+    kind = draw(st.sampled_from(["a2a", "hier", "geococo", "leader", "leader+plan"]))
+    if kind == "a2a":
+        return lat, bw, all_to_all_schedule(n, pay)
+    if kind in ("leader", "leader+plan"):
+        leader = draw(st.integers(0, n - 1))
+        plan = None
+        if kind == "leader+plan":
+            plan = kcenter_grouping(lat, min(draw(st.integers(2, 4)), n))
+        return lat, bw, leader_schedule(n, leader, pay, plan)
+    plan = kcenter_grouping(lat, min(draw(st.integers(2, 4)), n))
+    keep = 0.4 if kind == "geococo" else 1.0
+    gp = np.array([len(g) * pay * keep for g in plan.groups])
+    return lat, bw, hierarchical_schedule(
+        plan, pay, group_payload_bytes=gp,
+        lat=lat if kind == "geococo" else None, tiv=(kind == "geococo"),
+    )
+
+
+@given(builder_dags())
+@settings(max_examples=80, deadline=None)
+def test_event_bounded_by_barrier_on_builder_dags(case):
+    """The promoted invariant: with admission, event <= barrier holds for
+    every builder DAG (real dependency edges), not just barrier-edged
+    schedules — including the bandwidth-starved adversarial band."""
+    lat, bw, sched = case
+    sim = WANSimulator(lat, bw)
+    ev = sim.run(sched)
+    ba = sim.run(sched, barrier=True)
+    assert ev.makespan_ms <= ba.makespan_ms + 1e-6
+    np.testing.assert_allclose(ev.bytes_out, ba.bytes_out)
+    np.testing.assert_array_equal(ev.msg_matrix, ba.msg_matrix)
+
+
+@given(builder_dags(), st.integers(0, 1_000))
+@settings(max_examples=40, deadline=None)
+def test_event_bounded_with_compute_stages(case, seed):
+    """With per-transfer CPU stages the bound weakens by at most the total
+    modeled compute (each phase can add at most its max compute stage):
+    event <= barrier + sum(compute)."""
+    lat, bw, sched = case
+    rng = np.random.default_rng(seed)
+    import dataclasses
+
+    transfers = [
+        dataclasses.replace(t, compute_ms=float(rng.uniform(0.0, 30.0)))
+        for t in sched.transfers
+    ]
+    sched = TransmissionSchedule(transfers, label=sched.label,
+                                 phase_of=sched.phase_of)
+    total_cpu = sum(t.compute_ms for t in sched.transfers)
+    sim = WANSimulator(lat, bw)
+    ev = sim.run(sched).makespan_ms
+    ba = sim.run(sched, barrier=True).makespan_ms
+    assert ev <= ba + total_cpu + 1e-6
+
+
+@given(builder_dags(), st.integers(2, 3))
+@settings(max_examples=25, deadline=None)
+def test_stitched_stream_timeline_is_consistent(case, n_epochs):
+    """Stitched multi-epoch schedules keep every event-engine invariant:
+    deps respected, per-epoch commits monotone, byte accounting scales."""
+    lat, bw, sched = case
+    n = lat.shape[0]
+    stitched = stitch_schedules([sched] * n_epochs, epoch_ms=5.0, n=n)
+    res = WANSimulator(lat, bw).run(stitched, lats=[lat] * n_epochs)
+    one = WANSimulator(lat, bw).run(sched)
+    assert np.isfinite(res.finish_ms).all()
+    for i, t in enumerate(stitched.transfers):
+        for d in t.deps:
+            assert res.start_ms[i] >= res.finish_ms[d] - 1e-9
+    ep = np.array([t.epoch for t in stitched.transfers])
+    commits = [float(res.finish_ms[ep == k].max()) for k in range(n_epochs)]
+    assert all(b >= a - 1e-9 for a, b in zip(commits, commits[1:]))
+    # wire accounting is exactly n_epochs x one round (local stages add none)
+    np.testing.assert_allclose(res.bytes_out, n_epochs * one.bytes_out)
+    np.testing.assert_allclose(res.link_bytes, n_epochs * one.link_bytes)
+
+
 @given(st.integers(4, 10), st.integers(2, 4), st.integers(0, 5_000))
 @settings(max_examples=40, deadline=None)
 def test_builder_dag_dependency_structure(n, k, seed):
-    """The dep-edged hierarchical DAG is structurally sound on random WANs.
-
-    (Unlike the barrier-dep case above, ``event <= barrier`` is NOT a
-    theorem for real dependency edges — an early exchange can steal NIC
-    bandwidth from another group's still-running gathers — so the makespan
-    comparison for builder DAGs is a deterministic gate on the benchmark
-    topologies, in benchmarks/bench_makespan_regression.py and
-    tests/test_dag_engine.py, not a random-input property.)"""
+    """The dep-edged hierarchical DAG is structurally sound on random WANs."""
     lat = _lat_matrix(n, seed)
     plan = kcenter_grouping(lat, min(k, n))
     sched = hierarchical_schedule(plan, 250_000.0, lat=lat, tiv=True)

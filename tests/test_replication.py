@@ -149,6 +149,53 @@ def test_raft_cluster_grouping_faster():
     assert 0 < cl < 10_000
 
 
+def test_raft_commit_latency_memoized():
+    """Per-txn recomputation with identical (matrix, leader, payload) was
+    pure waste: the second lookup must come from the cache and agree."""
+    n = 7
+    tr, _ = _trace(n, 4, seed=13)
+    geo = RaftCluster(n, grouping=True, tiv=True)
+    lat = tr[0]
+    first = geo.commit_latency_ms(lat, 2, 16_000.0)
+    assert geo.commit_cache_hits == 0
+    again = geo.commit_latency_ms(lat, 2, 16_000.0)
+    assert geo.commit_cache_hits == 1
+    assert again == first
+    # a different leader or payload is a different cache entry
+    geo.commit_latency_ms(lat, 3, 16_000.0)
+    geo.commit_latency_ms(lat, 2, 32_000.0)
+    assert geo.commit_cache_hits == 1
+
+
+def test_raft_event_engine_agrees_with_closed_form_contention_free():
+    """On contention-free (infinite-bandwidth) matrices the event-driven
+    quorum path degenerates to propagation sums and must agree exactly with
+    the closed-form hop model, for both the flat and the grouped relay."""
+    n = 9
+    for seed in (5, 11, 23):
+        tr, _ = _trace(n, 2, seed=seed)
+        for grouping, tiv in ((False, False), (True, True), (True, False)):
+            rc = RaftCluster(n, grouping=grouping, tiv=tiv)
+            for lat in tr:
+                for leader in (0, n // 2):
+                    ev = rc.commit_latency_ms(lat, leader, 16_000.0)
+                    cf = rc._closed_form_commit_latency_ms(lat, leader, 16_000.0)
+                    assert ev == pytest.approx(cf, rel=1e-9)
+
+
+def test_raft_event_engine_charges_nic_contention():
+    """Under constrained bandwidth the leader's fan-out serializes on its
+    NIC: the event-driven quorum latency must exceed the closed-form model,
+    which charges every hop an uncontended wire."""
+    n = 9
+    tr, _ = _trace(n, 2, seed=11)
+    rc = RaftCluster(n, grouping=False, tiv=False, bandwidth_mbps=50.0)
+    lat = tr[0]
+    ev = rc.commit_latency_ms(lat, 0, 256_000.0)
+    cf = rc._closed_form_commit_latency_ms(lat, 0, 256_000.0)
+    assert ev > cf
+
+
 def test_planner_damping_limits_replans():
     rs = _run(6, grouping=True, filtering=True, epochs=12)
     # with mild jitter the damped replanner should not replan every epoch;

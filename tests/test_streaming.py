@@ -1,0 +1,142 @@
+"""Cross-epoch streaming engine: digest equality vs the non-streaming
+engine, pipeline overlap bounds, and the barrier/streaming compat contract.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    YCSBConfig,
+    YCSBGenerator,
+    aws_latency_matrix,
+    geo_clustered_matrix,
+    jitter_trace,
+    stitch_schedules,
+)
+from repro.core.planner import best_plan, kcenter_grouping
+from repro.core.schedule import hierarchical_schedule
+from repro.core.simulator import WANSimulator
+
+
+def _run(streaming: bool, *, n=5, epochs=8, epoch_ms=2.0, bw=200.0, seed=7):
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=2), np.random.default_rng(1)
+    )
+    trace = jitter_trace(lat, epochs, np.random.default_rng(2))
+    wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    bwm = np.where(wan, bw, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    cfg = EngineConfig(n_nodes=n, streaming=streaming, grouping=True,
+                       filtering=True, tiv=True, planner="kcenter",
+                       epoch_ms=epoch_ms)
+    eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=seed)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=400, theta=0.9, read_ratio=0.3, hot_write_frac=0.3,
+                   hot_locality=True),
+        n, seed=3, node_region=regions,
+    )
+    return eng.run(gen, trace, txns_per_node=8, n_epochs=epochs)
+
+
+def test_streaming_commits_byte_identical_state():
+    """Acceptance: streaming changes *when* epochs commit, never what —
+    validation still waits for every epoch write set, so the committed
+    state is byte-identical to the non-streaming engine."""
+    ns = _run(False)
+    st = _run(True)
+    assert st.state_digest == ns.state_digest
+    assert st.value_digest == ns.value_digest
+    assert st.committed == ns.committed
+    assert st.total_txns == ns.total_txns
+
+
+def test_streaming_overlap_bounds():
+    """max of epochs <= streaming makespan <= sum of epochs: the stitched
+    pipeline cannot finish before its slowest epoch would in isolation, and
+    cross-epoch dependencies only ever remove serialization.  The per-epoch
+    reference is the streaming run's *own* isolated formula wall
+    (max(epoch_ms, exec, sync) over the same schedules the stream stitched).
+    The upper bound carries one honest correction: the formula assumes
+    execution hides under the previous epoch's sync entirely, while the
+    measured commit chain pays commit -> exec -> gather serially per node —
+    so the stream may exceed the formula sum by at most the summed exec."""
+    st = _run(True)
+    formula_walls = np.array([
+        max(2.0, e.exec_ms, e.sync_ms) for e in st.epochs  # epoch_ms = 2.0
+    ])
+    exec_total = sum(e.exec_ms for e in st.epochs)
+    total = sum(e.wall_ms for e in st.epochs)
+    assert formula_walls.max() - 1e-6 <= total
+    assert total <= formula_walls.sum() + exec_total + 1e-6
+    # per-epoch accounting closes: walls are inter-commit gaps and
+    # pipeline_overlap_ms is the formula's charge minus the measured wall
+    for e, f in zip(st.epochs, formula_walls):
+        assert e.pipeline_overlap_ms == pytest.approx(f - e.wall_ms, abs=1e-9)
+    commits = [e.stream_commit_ms for e in st.epochs]
+    assert all(b >= a - 1e-9 for a, b in zip(commits, commits[1:]))
+    assert commits[-1] == pytest.approx(total)
+
+
+def test_streaming_respects_epoch_cadence():
+    """Transactions arrive at the epoch cadence: the stream can never
+    commit the last epoch before (n_epochs - 1) * epoch_ms."""
+    st = _run(True, epoch_ms=50.0)
+    commits = [e.stream_commit_ms for e in st.epochs]
+    assert commits[-1] >= (len(st.epochs) - 1) * 50.0 - 1e-6
+
+
+def test_streaming_reduces_wall_clock_on_trace_topology():
+    """Acceptance: on a trace topology with epoch_ms < makespan, the
+    measured stitched pipeline beats the max(epoch, exec, sync) formula —
+    epoch e+1 gathers genuinely stream under epoch e scatters."""
+    base, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=12, n_clusters=3, congestion_frac=0.3,
+                       congestion_mult=(1.3, 2.5)),
+        np.random.default_rng(3),
+    )
+    trace = jitter_trace(base, 8, np.random.default_rng(17))
+    walls = {}
+    for streaming in (False, True):
+        cfg = EngineConfig(n_nodes=12, streaming=streaming, grouping=True,
+                           filtering=True, tiv=True, planner="kcenter",
+                           epoch_ms=2.0, txn_exec_us=5.0)
+        eng = GeoCluster(cfg, bandwidth_mbps=100.0, seed=7)
+        gen = YCSBGenerator(
+            YCSBConfig(n_keys=400, theta=0.9, read_ratio=0.3,
+                       hot_write_frac=0.3),
+            12, seed=3,
+        )
+        rs = eng.run(gen, trace, txns_per_node=20, n_epochs=8)
+        walls[streaming] = rs.wall_s
+        if streaming:
+            assert rs.pipeline_overlap_ms > 0.0
+            assert all(e.sync_ms > cfg.epoch_ms for e in rs.epochs)
+    assert walls[True] < walls[False]
+
+
+def test_streaming_barrier_rejected():
+    """Compat contract: the stitched DAG has no barrier-phase semantics —
+    the config, the planner ranking and the simulator all refuse."""
+    with pytest.raises(ValueError, match="streaming"):
+        EngineConfig(n_nodes=4, streaming=True, barrier=True)
+    lat = aws_latency_matrix()
+    with pytest.raises(ValueError, match="event engine"):
+        best_plan(lat, payload_bytes=1e5, streaming=True, barrier=True,
+                  method="kcenter")
+    plan = kcenter_grouping(lat, 3)
+    sched = hierarchical_schedule(plan, 250_000.0)
+    stitched = stitch_schedules([sched, sched], n=10)
+    with pytest.raises(ValueError, match="event engine"):
+        WANSimulator(lat, 500.0).run(stitched, barrier=True, lats=[lat, lat])
+
+
+def test_streaming_flag_reaches_plan_ranking():
+    """best_plan(streaming=True) ranks by two stitched epochs and still
+    returns a valid plan; the flat fallback remains a candidate."""
+    lat = aws_latency_matrix()
+    plan = best_plan(lat, payload_bytes=250_000.0, bandwidth_mbps=500.0,
+                     streaming=True, method="kcenter")
+    plan.validate(lat.shape[0])
