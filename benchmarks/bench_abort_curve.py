@@ -1,0 +1,133 @@
+"""Staleness-aware OCC: abort rate vs epoch cadence (Fig-style curve).
+
+The feedback loop under test (``EngineConfig(staleness_feedback=True)``):
+the stitched streaming simulation measures per-node commit times, each
+node's snapshot view advances only when its inbound epoch transfers have
+delivered, and reads are versioned against the executing node's view — so
+read-validation aborts become a function of network conditions.  On the
+paper's alibaba-like 5-node testbed (Fig 11 TPC-C regime, ~15 Mbps WAN):
+
+* at the paper's native 10 ms cadence the WAN backlog keeps views stale and
+  the read-abort rate is substantially nonzero;
+* the abort rate is monotonically non-increasing in ``epoch_ms`` (cadence
+  slack pays the backlog down), reaching zero once the cadence exceeds the
+  sync makespan;
+* write-write aborts are invariant across all of it (same transaction
+  stream; the read rule only ever adds aborts);
+* a bursty trace (latency spikes) raises the read-abort rate vs the steady
+  trace at the pipeline's saturation boundary;
+* with the default ``staleness_feedback=False`` the streaming engine's
+  digests remain byte-identical to the formula engine (the regression gate
+  for the timing-dependent mode staying opt-in).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import jitter_trace
+
+from .bench_throughput import _run_tpcc
+from .common import check, paper_testbed
+
+# steady-trace sync makespan on this testbed is ~90 ms: 80 ms sits at the
+# saturation boundary where burstiness has headroom to bite (at 10 ms both
+# traces are deep in backlog and the lag saturates either way)
+BOUNDARY_EPOCH_MS = 80.0
+
+# the deterministic planner keeps the curve reproducible: the MILP search is
+# wall-clock-limited, so under harness CPU load it can pick different plans
+# run-to-run, shifting commit times across the view-advance threshold
+PLANNER = "kcenter"
+
+
+def run(quick: bool = True) -> dict:
+    epochs = 30 if quick else 60
+    base, regions, trace = paper_testbed(epochs)
+
+    # abort-rate vs cadence curve (plus the ww-invariance it rides on)
+    grid = [5.0, 10.0, 20.0, 40.0, 80.0, 160.0, 320.0]
+    curve = []
+    ww = []
+    for ems in grid:
+        rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
+                          streaming=True, staleness_feedback=True,
+                          epoch_ms=ems, planner=PLANNER)
+        curve.append(rs.read_abort_rate)
+        ww.append(rs.ww_aborts)
+    native_rate = curve[grid.index(10.0)]
+
+    # bursty vs steady trace at the saturation boundary
+    bursty_trace = jitter_trace(
+        base, epochs, np.random.default_rng(5), rel_sigma=0.15,
+        spike_prob=0.10, spike_mult=(2.0, 4.0), spike_len=(3, 10),
+    )
+    rates = {}
+    for name, tr in (("steady", trace), ("bursty", bursty_trace)):
+        rs, _ = _run_tpcc("TPCC-A", True, tr, regions, epochs=epochs,
+                          streaming=True, staleness_feedback=True,
+                          epoch_ms=BOUNDARY_EPOCH_MS, planner=PLANNER)
+        rates[name] = rs.read_abort_rate
+
+    # default-off regression gate: streaming digests byte-identical to the
+    # formula engine, and the read rule stays vacuous
+    formula_rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
+                              planner=PLANNER)
+    stream_rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
+                             streaming=True, planner=PLANNER)
+    default_off = {
+        "state_consistent": formula_rs.state_digest == stream_rs.state_digest,
+        "value_consistent": formula_rs.value_digest == stream_rs.value_digest,
+        "read_aborts": stream_rs.read_aborts,
+    }
+
+    checks = [
+        check(native_rate > 0.0,
+              "staleness feedback: nonzero read-abort rate on the Fig11 "
+              "TPC-C workload at the native 10 ms cadence",
+              f"read-abort rate {native_rate:.1%}"),
+        # 2.5% tolerance: measured filter CPU rides the simulated timeline,
+        # so harness load shifts boundary commits across the view-advance
+        # threshold — same-config spread up to ~2pp was observed between
+        # harness runs near the 80 ms boundary (the real adjacent-point
+        # drops span 8-37pp, so the check keeps its teeth; a modeled
+        # bytes-proportional CPU for gated runs is a ROADMAP follow-up)
+        check(all(a >= b - 0.025 for a, b in zip(curve, curve[1:])),
+              "abort rate monotonically non-increasing as epoch cadence "
+              "grows (alibaba-like topology)",
+              ", ".join(f"{int(e)}ms={r:.1%}" for e, r in zip(grid, curve))),
+        check(curve[0] > 0.25 and curve[-1] <= 0.005,
+              "cadence above the sync makespan pays the backlog down to "
+              "(near-)zero read-aborts",
+              f"{int(grid[0])}ms={curve[0]:.1%} -> {int(grid[-1])}ms="
+              f"{curve[-1]:.1%}"),
+        check(len(set(ww)) == 1,
+              "write-write aborts invariant across cadences (same txn "
+              "stream; the read rule only ever adds aborts)",
+              f"ww_aborts={ww[0]}"),
+        # absolute +2pp margin (true gap ~6.5pp at the boundary cadence,
+        # ratio ~1.45x) so the same ~2pp measured-CPU noise cannot flip it
+        check(rates["bursty"] > rates["steady"] + 0.02,
+              "bursty trace raises the read-abort rate vs the steady trace",
+              f"steady {rates['steady']:.1%} vs bursty {rates['bursty']:.1%}"),
+        check(default_off["state_consistent"]
+              and default_off["value_consistent"]
+              and default_off["read_aborts"] == 0,
+              "staleness_feedback=False (default) keeps streaming digests "
+              "byte-identical and the read rule vacuous"),
+    ]
+    return {
+        "figure": "abort-curve",
+        "epoch_ms_grid": grid,
+        "read_abort_rate": curve,
+        "ww_aborts": ww,
+        "native_cadence_read_abort_rate": native_rate,
+        "boundary_epoch_ms": BOUNDARY_EPOCH_MS,
+        "trace_rates": rates,
+        "default_off": default_off,
+        "checks": checks,
+    }
+
+
+if __name__ == "__main__":
+    run(quick=False)

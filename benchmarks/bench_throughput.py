@@ -24,7 +24,8 @@ from .common import check, paper_testbed
 
 
 def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
-              streaming: bool = False):
+              streaming: bool = False, staleness_feedback: bool = False,
+              epoch_ms: float = 10.0, planner: str = "milp"):
     """Paper regime: Alibaba-cloud 5-node testbed, WAN bandwidth in the
     Fig. 3 constrained band (~15 Mbps to HK), 100 warehouses with hot item
     contention "to stress inter-node coordination" (Sec 6.3)."""
@@ -35,7 +36,8 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
     n = 5
     cfg = EngineConfig(
         n_nodes=n, grouping=grouping, filtering=grouping, tiv=grouping,
-        planner="milp", epoch_ms=10.0, streaming=streaming,
+        planner=planner, epoch_ms=epoch_ms, streaming=streaming,
+        staleness_feedback=staleness_feedback,
     )
     wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     eng = GeoCluster(
@@ -83,6 +85,10 @@ def run(quick: bool = True) -> dict:
         "wall_s_streaming": stream_rs.wall_s,
         "pipeline_overlap_ms": stream_rs.pipeline_overlap_ms,
         "state_consistent": stream_rs.state_digest == geo_a_rs.state_digest,
+        # abort breakdown: default staleness_feedback=False keeps the read
+        # rule vacuous (the abort-curve module exercises the feedback arm)
+        "read_aborts": stream_rs.read_aborts,
+        "ww_aborts": stream_rs.ww_aborts,
     }
 
     # CRDB plane: modeled Raft batches over a 9-node WAN

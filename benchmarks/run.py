@@ -17,6 +17,7 @@ import time
 import traceback
 
 from . import (
+    bench_abort_curve,
     bench_bandwidth_filtering,
     bench_comm_heatmap,
     bench_compression,
@@ -40,6 +41,9 @@ MODULES = [
     ("makespan-regression", bench_makespan_regression),
     ("Fig10", bench_comm_heatmap),
     ("Fig11", bench_throughput),
+    # staleness-aware OCC: measured commit staleness -> read-abort rate;
+    # gates the abort-vs-cadence coupling and the default-off digest identity
+    ("abort-curve", bench_abort_curve),
     ("Fig12", bench_grouping_strategies),
     ("Fig13", bench_scaling_cost_benefit),
     ("Fig14+Table1", bench_bandwidth_filtering),
@@ -70,6 +74,18 @@ def main() -> None:
         "barrier_reference": True,
         "streaming": "stitched cross-epoch DAG (gated in makespan-regression;"
                      " Fig11 records a streaming arm)",
+        "occ": {
+            "validation": "epoch OCC: first-writer-wins incl. read-aborted "
+                          "writers (no reinstatement), txn_id tie-break; "
+                          "read rule vs epoch-start snapshot",
+            "staleness_feedback": "off by default (digest-preserving); "
+                                  "abort-curve exercises the feedback loop "
+                                  "(per-node views from measured stitched "
+                                  "commit times)",
+            "raft_throughput": "batches pipelined through one stitched "
+                               "leader-schedule stream (leader-NIC "
+                               "contention; no linear batch scaling)",
+        },
     }
     n_pass = n_fail = n_err = 0
     t_start = time.perf_counter()

@@ -28,7 +28,14 @@ from .latency import (
     tiv_pairs,
 )
 from .monitor import LatencyMonitor, VivaldiSystem
-from .occ import Txn, committed_updates, txn_updates, validate_epoch
+from .occ import (
+    Txn,
+    ValidationResult,
+    committed_updates,
+    txn_updates,
+    validate_epoch,
+    validate_epoch_detailed,
+)
 from .planner import (
     GroupPlan,
     Replanner,
@@ -55,7 +62,7 @@ from .schedule import (
     messages_per_node,
     stitch_schedules,
 )
-from .simulator import RoundResult, WANSimulator
+from .simulator import RoundResult, WANSimulator, node_commit_ms
 from .whitedata import (
     FilterResult,
     FilterStats,

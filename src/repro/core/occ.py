@@ -7,12 +7,27 @@ write sets.  Validation is deterministic and identical at every replica:
 * **Write-write rule (first-writer-wins, no reinstatement)**: for each key
   written in the epoch, the writer with the smallest version wins the key.
   A transaction *aborts* iff it loses any key it writes — regardless of
-  whether the winner itself later aborts.  This deliberately avoids cascaded
+  whether the winner itself later aborts, **and regardless of whether the
+  winner was itself read-aborted**.  This deliberately avoids cascaded
   reinstatement so the decision is computable from raw write-set overlap
   alone; crucially it makes *intra-group* abort detection at an aggregator
   sound: losing a key to any same-epoch writer is final (Sec 4.3 step 2).
+  Including read-aborted writers in the winner map is what makes the abort
+  set *monotone in staleness*: versioning the same transaction stream's
+  reads against older snapshots can only ever add aborts, never reinstate
+  a write-write loser (``tests/test_crdt_occ.py`` pins this semantics).
+  Version ties (two transactions sharing ``(epoch, seq, node)`` — impossible
+  for well-formed generators, whose ``seq`` is a node-local monotone
+  counter) are broken deterministically by ``txn_id``, so at most one
+  writer ever wins a key.
+
 * **Read validation**: a transaction aborts if any read version is stale
-  w.r.t. the epoch-start snapshot (models delayed/stale reads).
+  w.r.t. the epoch-start snapshot.  Reads are versioned at the *executing
+  node's* snapshot view; when that view lags the global epoch-start state
+  (the replica is paying off a WAN backlog, see
+  ``EngineConfig(staleness_feedback=True)``), the rule fires — the paper's
+  consistency argument that late-arriving state makes replicas validate
+  against older snapshots.
 
 Committed writes become :class:`~repro.core.crdt.Update` deltas and merge via
 the CRDT join.
@@ -25,7 +40,14 @@ from typing import Iterable, Mapping, Sequence
 
 from .crdt import DeltaCRDTStore, Update, Version
 
-__all__ = ["Txn", "validate_epoch", "committed_updates", "txn_updates"]
+__all__ = [
+    "Txn",
+    "ValidationResult",
+    "validate_epoch",
+    "validate_epoch_detailed",
+    "committed_updates",
+    "txn_updates",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,48 +81,86 @@ def txn_updates(txn: Txn) -> list[Update]:
     ]
 
 
-def validate_epoch(
+@dataclasses.dataclass(frozen=True)
+class ValidationResult:
+    """Abort breakdown of one epoch validation.
+
+    ``read_aborted`` (stale read versions) and ``ww_aborted`` (lost a
+    written key to an earlier writer) may overlap — a transaction can fail
+    both rules; ``aborted`` is their union and ``committed`` its complement.
+    """
+
+    committed: frozenset[int]
+    read_aborted: frozenset[int]
+    ww_aborted: frozenset[int]
+
+    @property
+    def aborted(self) -> frozenset[int]:
+        return self.read_aborted | self.ww_aborted
+
+
+def validate_epoch_detailed(
     txns: Sequence[Txn], snapshot: DeltaCRDTStore | None = None
-) -> tuple[set[int], set[int]]:
-    """Deterministic epoch validation.  Returns (committed_ids, aborted_ids).
+) -> ValidationResult:
+    """Deterministic epoch validation with a per-rule abort breakdown.
 
     Works on any subset of the epoch's transactions; running it on a group's
     local subset yields abort decisions that are a *sound under-approximation*
     of the global outcome (a transaction aborted locally is aborted globally,
     because first-writer-wins per key is monotone under adding more writers).
     """
-    aborted: set[int] = set()
+    read_aborted: set[int] = set()
     # read validation against the epoch-start snapshot
     if snapshot is not None:
         for t in txns:
             for key, ver in t.read_set:
                 if snapshot.version_of(key) > ver:
-                    aborted.add(t.txn_id)
+                    read_aborted.add(t.txn_id)
                     break
-    # first-writer-wins per key
-    winners: dict[str, Version] = {}
+    # first-writer-wins per key.  The winner map includes read-aborted
+    # writers (no reinstatement — see module docstring) and breaks version
+    # ties by txn_id, so a forced (epoch, seq, node) collision still yields
+    # exactly one winner per key.
+    ww_aborted: set[int] = set()
+    winners: dict[str, tuple[Version, int]] = {}
     by_key: dict[str, list[Txn]] = {}
     for t in txns:
         for k in t.writes_keys():
             by_key.setdefault(k, []).append(t)
-            v = t.version
-            if k not in winners or v < winners[k]:
-                winners[k] = v
+            cand = (t.version, t.txn_id)
+            if k not in winners or cand < winners[k]:
+                winners[k] = cand
     for k, writers in by_key.items():
         for t in writers:
-            if t.version != winners[k]:
-                aborted.add(t.txn_id)
-    committed = {t.txn_id for t in txns} - aborted
-    return committed, aborted
+            if (t.version, t.txn_id) != winners[k]:
+                ww_aborted.add(t.txn_id)
+    committed = {t.txn_id for t in txns} - read_aborted - ww_aborted
+    return ValidationResult(
+        committed=frozenset(committed),
+        read_aborted=frozenset(read_aborted),
+        ww_aborted=frozenset(ww_aborted),
+    )
+
+
+def validate_epoch(
+    txns: Sequence[Txn], snapshot: DeltaCRDTStore | None = None
+) -> tuple[set[int], set[int]]:
+    """Deterministic epoch validation.  Returns (committed_ids, aborted_ids).
+
+    Compatibility wrapper around :func:`validate_epoch_detailed` (which also
+    reports the read-rule vs write-write abort breakdown).
+    """
+    res = validate_epoch_detailed(txns, snapshot)
+    return set(res.committed), set(res.aborted)
 
 
 def committed_updates(
     txns: Sequence[Txn], snapshot: DeltaCRDTStore | None = None
 ) -> tuple[list[Update], set[int]]:
     """Validate and emit the updates of committed transactions."""
-    committed, aborted = validate_epoch(txns, snapshot)
+    res = validate_epoch_detailed(txns, snapshot)
     ups: list[Update] = []
     for t in txns:
-        if t.txn_id in committed:
+        if t.txn_id in res.committed:
             ups.extend(txn_updates(t))
-    return ups, aborted
+    return ups, set(res.aborted)

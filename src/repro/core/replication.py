@@ -30,6 +30,16 @@ Throughput model — two regimes:
   Commit content is untouched (validation still waits for every epoch
   write set), so digests are byte-identical across both regimes.
 
+  ``EngineConfig(staleness_feedback=True)`` (streaming only) additionally
+  feeds the measured timing back into the OCC outcome: each replica keeps
+  its own snapshot view, advanced only when the stitched simulation has
+  delivered that node's inbound epoch transfers, and transactions version
+  their reads against the executing node's view — so a node paying off a
+  WAN backlog executes epoch ``e`` against an epoch ``e-k`` snapshot and
+  read-validation aborts become a function of network conditions
+  (timing-dependent commit by design; digests may diverge from the
+  default engines, see ``EpochStats.read_aborts`` / ``view_lag_mean``).
+
 Within an epoch the synchronization itself is pipelined too (the default,
 ``EngineConfig.barrier=False``): write-set rounds execute as an event-driven
 transfer DAG where each group's aggregator-side filter/compress CPU time is
@@ -59,7 +69,7 @@ import numpy as np
 
 from . import strategies as _strategies
 from .crdt import DeltaCRDTStore, Update
-from .occ import Txn, committed_updates, txn_updates, validate_epoch
+from .occ import Txn, txn_updates, validate_epoch_detailed
 from .planner import GroupPlan, Replanner, no_grouping
 from .schedule import (
     TransmissionSchedule,
@@ -68,7 +78,7 @@ from .schedule import (
     leader_schedule,
     stitch_schedules,
 )
-from .simulator import WANSimulator
+from .simulator import WANSimulator, node_commit_ms
 from .whitedata import FilterResult, FilterStats, filter_group_batch
 
 __all__ = ["EngineConfig", "EpochStats", "RunStats", "GeoCluster", "RaftCluster"]
@@ -94,6 +104,14 @@ class EngineConfig:
     txn_exec_us: float = 40.0
     barrier: bool = False              # True = pre-DAG barrier-phase engine
     streaming: bool = False            # True = cross-epoch stitched simulation
+    # feed measured per-node commit staleness back into the OCC abort model:
+    # replicas execute each epoch against their *own* snapshot view, which
+    # advances only when the stitched simulation delivered that node's
+    # inbound epoch transfers — so read-set validation aborts become a
+    # function of network conditions.  Timing-dependent commit by design:
+    # the default (off) preserves the byte-identical-digest invariant
+    # across barrier/event/streaming engines.
+    staleness_feedback: bool = False
     sync_strategy: str | None = None   # named wan_sync preset (overrides booleans)
     grouping: bool = True              # GeoCoCo hierarchical transmission
     filtering: bool = True             # white-data filter at aggregators
@@ -120,6 +138,12 @@ class EngineConfig:
                 "stitched DAGs have no barrier-phase semantics (set "
                 "barrier=False, or drop streaming for the legacy "
                 "max(epoch, exec, sync) formula)"
+            )
+        if self.staleness_feedback and not self.streaming:
+            raise ValueError(
+                "staleness_feedback=True requires streaming=True: per-node "
+                "view staleness is measured from the stitched multi-epoch "
+                "simulation's per-node commit times"
             )
         if self.sync_strategy is not None:
             spec = _strategies.get("wan_sync", self.sync_strategy)
@@ -201,6 +225,18 @@ class EpochStats:
     # formula model (negative for epochs paying off an inherited backlog).
     pipeline_overlap_ms: float = 0.0
     stream_commit_ms: float = 0.0
+    # abort breakdown (validate_epoch_detailed): read_aborts failed the
+    # read-validation rule (stale read versions — nonzero only under
+    # staleness_feedback, where reads are versioned against per-node views),
+    # ww_aborts lost a written key first-writer-wins.  The rules can overlap
+    # (a txn may fail both), so read_aborts + ww_aborts >= aborted.
+    read_aborts: int = 0
+    ww_aborts: int = 0
+    # staleness_feedback only: how many epochs each node's snapshot view
+    # lagged the global state when this epoch's transactions executed
+    # (mean/max over nodes; 0 = every replica executed against fresh state)
+    view_lag_mean: float = 0.0
+    view_lag_max: int = 0
 
 
 @dataclasses.dataclass
@@ -218,6 +254,30 @@ class RunStats:
     @property
     def total_txns(self) -> int:
         return sum(e.n_txns for e in self.epochs)
+
+    @property
+    def aborted(self) -> int:
+        return sum(e.aborted for e in self.epochs)
+
+    @property
+    def read_aborts(self) -> int:
+        """Transactions failing read-set validation (stale read versions)."""
+        return sum(e.read_aborts for e in self.epochs)
+
+    @property
+    def ww_aborts(self) -> int:
+        """Transactions losing a written key first-writer-wins."""
+        return sum(e.ww_aborts for e in self.epochs)
+
+    @property
+    def abort_rate(self) -> float:
+        t = self.total_txns
+        return self.aborted / t if t else 0.0
+
+    @property
+    def read_abort_rate(self) -> float:
+        t = self.total_txns
+        return self.read_aborts / t if t else 0.0
 
     @property
     def wall_s(self) -> float:
@@ -274,6 +334,9 @@ class _EpochRound:
     n_txns: int
     committed: int
     aborted: int
+    read_aborts: int
+    ww_aborts: int
+    ups: list[Update]
     exec_ms: float
     node_exec_ms: np.ndarray
     filter_cpu_ms: float
@@ -550,10 +613,19 @@ class GeoCluster:
         # deterministic global validation over surviving txns, then CRDT
         # merge.  Epoch commit sinks the *full* DAG (every transfer
         # delivered) — the engines change when bytes move, never which
-        # bytes commit, so this is timing-independent.
-        ups, aborted_global = committed_updates(surviving, snapshot)
+        # bytes commit, so this is timing-independent.  Validation always
+        # runs against the globally-merged epoch-start snapshot (every
+        # replica holds the full epoch's write/read metadata by commit
+        # time); under staleness_feedback the *read versions* inside the
+        # transactions came from per-node views, which is what arms the
+        # read rule.
+        vres = validate_epoch_detailed(surviving, snapshot)
+        ups = [
+            u for t in surviving if t.txn_id in vres.committed
+            for u in txn_updates(t)
+        ]
         pre_aborted = n_txns - len(surviving)
-        committed = len(surviving) - len(aborted_global)
+        committed = len(vres.committed)
         self.store.apply_many(ups)
 
         return _EpochRound(
@@ -562,7 +634,10 @@ class GeoCluster:
             lat=np.asarray(lat, dtype=float),
             n_txns=n_txns,
             committed=committed,
-            aborted=pre_aborted + len(aborted_global),
+            aborted=pre_aborted + len(vres.aborted),
+            read_aborts=len(vres.read_aborted),
+            ww_aborts=len(vres.ww_aborted),
+            ups=ups,
             exec_ms=exec_ms,
             node_exec_ms=node_exec_ms,
             filter_cpu_ms=filter_cpu_ms,
@@ -580,6 +655,8 @@ class GeoCluster:
         wall_ms: float | None = None,
         pipeline_overlap_ms: float = 0.0,
         stream_commit_ms: float = 0.0,
+        view_lag_mean: float = 0.0,
+        view_lag_max: int = 0,
     ) -> EpochStats:
         """Assemble one epoch's stats from its (isolated) round simulation."""
         cfg = self.cfg
@@ -640,6 +717,10 @@ class GeoCluster:
             sync_wan_overlap_ms=wan_overlap_ms,
             pipeline_overlap_ms=pipeline_overlap_ms,
             stream_commit_ms=stream_commit_ms,
+            read_aborts=rnd.read_aborts,
+            ww_aborts=rnd.ww_aborts,
+            view_lag_mean=view_lag_mean,
+            view_lag_max=view_lag_max,
         )
 
     def run_epoch(
@@ -684,6 +765,43 @@ class GeoCluster:
             value_digest=self.store.digest(values_only=True),
         )
 
+    def _stream_prefix(self, rounds: list["_EpochRound"]):
+        """Stitch the epochs prepared so far and run the streaming event
+        simulation over them.  Returns (per-node commit-time matrix,
+        stream RoundResult, stitched schedule)."""
+        cfg = self.cfg
+        stitched = stitch_schedules(
+            [r.schedule for r in rounds],
+            node_exec_ms=[r.node_exec_ms for r in rounds],
+            epoch_ms=cfg.epoch_ms,
+            n=cfg.n_nodes,
+        )
+        stream_sim = WANSimulator(rounds[0].lat, self.bandwidth,
+                                  loss=self.loss, rng=self.rng)
+        stream = stream_sim.run(stitched, lats=[r.lat for r in rounds])
+        commits = node_commit_ms(stitched, stream, cfg.n_nodes, len(rounds))
+        return commits, stream, stitched
+
+    def _advance_views(
+        self,
+        views: list[DeltaCRDTStore],
+        view_next: np.ndarray,
+        rounds: list["_EpochRound"],
+        commit_ms: np.ndarray,
+        now_ms: float,
+    ) -> None:
+        """Merge every epoch the stitched simulation has delivered to each
+        node by ``now_ms`` into that node's snapshot view.  Views advance a
+        contiguous epoch prefix (a node merges epoch k only once its k-th
+        inbound transfers have all delivered — the same per-node commit
+        dependency ``stitch_schedules`` gates sends on)."""
+        for i in range(self.cfg.n_nodes):
+            nxt = int(view_next[i])
+            while nxt < commit_ms.shape[0] and commit_ms[nxt, i] <= now_ms + 1e-9:
+                views[i].apply_many(rounds[nxt].ups)
+                nxt += 1
+            view_next[i] = nxt
+
     def _run_streaming(
         self, generator, trace, txns_per_node: int, n_epochs: int
     ) -> list[EpochStats]:
@@ -695,15 +813,49 @@ class GeoCluster:
         the serial/overlap split, byte accounting) and what
         ``pipeline_overlap_ms`` compares the measured wall-clock to.
         Commits are processed inside the loop exactly as in the
-        non-streaming engine, so the final digests are byte-identical.
+        non-streaming engine, so with ``staleness_feedback=False`` the
+        final digests are byte-identical.
+
+        With ``staleness_feedback=True`` the loop closes the timing -> OCC
+        feedback: transactions of epoch ``e`` execute optimistically when
+        they *arrive* (``e * epoch_ms`` — GeoGauss executes at cadence, it
+        does not stall the CPU on remote state) against the executing
+        node's snapshot view, which advances only as the stitched
+        simulation delivers that node's inbound epoch transfers.  A node
+        paying off a WAN backlog therefore versions its reads against an
+        epoch ``e-k`` snapshot, and the read-validation rule aborts exactly
+        the transactions whose reads the backlog made stale — abort rate
+        becomes a function of network conditions.  (Write-set *sends*
+        remain gated on the node's previous-epoch commit, as in the
+        stitched timing DAG: execution is optimistic, transmission stays
+        ordered.)  The stitched prefix is re-simulated as epochs append —
+        with bandwidth admission an earlier epoch's measured times are
+        unaffected by later arrivals, so the prefix times are final.
         """
         cfg = self.cfg
+        feedback = cfg.staleness_feedback
         rounds: list[_EpochRound] = []
         sims: list[WANSimulator] = []
         results = []
+        lags: list[tuple[float, int]] = []
+        views = view_next = commit_ms = None
+        stream = stitched = None
+        if feedback:
+            views = [DeltaCRDTStore(i) for i in range(cfg.n_nodes)]
+            view_next = np.zeros(cfg.n_nodes, dtype=int)
+            commit_ms = np.zeros((0, cfg.n_nodes))
         for e in range(n_epochs):
             lat = trace[e % len(trace)]
-            txns = generator.epoch_txns(e, txns_per_node, snapshot=self.store)
+            if feedback:
+                self._advance_views(views, view_next, rounds, commit_ms,
+                                    e * cfg.epoch_ms)
+                lag = e - view_next
+                lags.append((float(lag.mean()) if lag.size else 0.0,
+                             int(lag.max()) if lag.size else 0))
+                snapshot = views
+            else:
+                snapshot = self.store
+            txns = generator.epoch_txns(e, txns_per_node, snapshot=snapshot)
             rnd = self._prepare_epoch(e, txns, lat)
             sim = WANSimulator(lat, self.bandwidth, loss=self.loss,
                                rng=self.rng)
@@ -712,18 +864,15 @@ class GeoCluster:
             rounds.append(rnd)
             sims.append(sim)
             results.append(res)
+            if feedback:
+                # measured staleness for the *next* epoch's views; the last
+                # iteration's prefix is the full stream the stats consume
+                commit_ms, stream, stitched = self._stream_prefix(rounds)
         if not rounds:
             return []
 
-        stitched = stitch_schedules(
-            [r.schedule for r in rounds],
-            node_exec_ms=[r.node_exec_ms for r in rounds],
-            epoch_ms=cfg.epoch_ms,
-            n=cfg.n_nodes,
-        )
-        stream_sim = WANSimulator(rounds[0].lat, self.bandwidth,
-                                  loss=self.loss, rng=self.rng)
-        stream = stream_sim.run(stitched, lats=[r.lat for r in rounds])
+        if stream is None:
+            _, stream, stitched = self._stream_prefix(rounds)
 
         epoch_of = np.array([t.epoch for t in stitched.transfers])
         epochs: list[EpochStats] = []
@@ -733,11 +882,14 @@ class GeoCluster:
             wall = commit - prev_commit
             prev_commit = commit
             formula = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
+            lag_mean, lag_max = lags[k] if feedback else (0.0, 0)
             epochs.append(self._epoch_stats(
                 rnd, sim, res,
                 wall_ms=wall,
                 pipeline_overlap_ms=formula - wall,
                 stream_commit_ms=commit,
+                view_lag_mean=lag_mean,
+                view_lag_max=lag_max,
             ))
         return epochs
 
@@ -812,6 +964,22 @@ class RaftCluster:
             self._plan_cache[key] = plan
         return plan
 
+    def _quorum_ms(self, res, transfers, leader: int, ack: np.ndarray,
+                   epoch: int | None = None) -> float:
+        """Majority-quorum commit time from an event-engine result: each
+        follower's delivery plus its ack back to the leader, quorum-th
+        smallest (leader + quorum followers = majority).  ``epoch``
+        restricts to one batch of a stitched multi-batch stream."""
+        times = [
+            float(res.finish_ms[i]) + float(ack[t.dst, leader])
+            for i, t in enumerate(transfers)
+            if t.dst != leader and t.src != t.dst
+            and (epoch is None or t.epoch == epoch)
+        ]
+        times.sort()
+        quorum = self.n // 2
+        return float(times[quorum - 1]) if quorum >= 1 else 0.0
+
     def commit_latency_ms(
         self, lat: np.ndarray, leader: int, payload_bytes: float
     ) -> float:
@@ -828,15 +996,7 @@ class RaftCluster:
         plan = self._plan(lat, mat_key) if self.grouping else None
         sched = leader_schedule(self.n, leader, payload_bytes, plan)
         res = sim.run(sched)
-        ack = self._ack_ms(lat)
-        times = [
-            float(res.finish_ms[i]) + float(ack[t.dst, leader])
-            for i, t in enumerate(sched.transfers)
-            if t.dst != leader
-        ]
-        times.sort()
-        quorum = self.n // 2  # leader + quorum followers = majority
-        val = float(times[quorum - 1]) if quorum >= 1 else 0.0
+        val = self._quorum_ms(res, sched.transfers, leader, self._ack_ms(lat))
         self._commit_cache[key] = val
         return val
 
@@ -878,6 +1038,42 @@ class RaftCluster:
         quorum = n // 2
         return float(times[quorum - 1]) if quorum >= 1 else 0.0
 
+    def pipelined_commit_ms(
+        self, lat: np.ndarray, leader: int, payload_bytes: float,
+        batches: int,
+    ) -> float:
+        """Commit time of the *last* of ``batches`` replication batches
+        pipelined through one stitched leader-schedule stream.
+
+        The batches share one event simulation
+        (:func:`~repro.core.schedule.stitch_schedules` chains the per-batch
+        leader DAGs; bandwidth admission serializes same-NIC appends in
+        batch order), so in-flight batches contend for the leader's NIC
+        instead of replicating for free.  On contention-free
+        (infinite-bandwidth) matrices every batch streams at propagation
+        speed and the last batch commits exactly when a single batch would
+        — recovering the historical independent-batch model.  Memoized per
+        ``(matrix, leader, payload, batches)``.
+        """
+        if batches <= 1:
+            return self.commit_latency_ms(lat, leader, payload_bytes)
+        lat = np.asarray(lat, dtype=float)
+        mat_key = lat.tobytes()
+        key = (mat_key, int(leader), float(payload_bytes), int(batches))
+        hit = self._commit_cache.get(key)
+        if hit is not None:
+            self.commit_cache_hits += 1
+            return hit
+        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng)
+        plan = self._plan(lat, mat_key) if self.grouping else None
+        one = leader_schedule(self.n, leader, payload_bytes, plan)
+        stitched = stitch_schedules([one] * batches, n=self.n)
+        res = sim.run(stitched)
+        val = self._quorum_ms(res, stitched.transfers, leader,
+                              self._ack_ms(lat), epoch=batches - 1)
+        self._commit_cache[key] = val
+        return val
+
     def throughput(
         self,
         trace,
@@ -886,10 +1082,26 @@ class RaftCluster:
         batches_in_flight: int = 8,
         ops_per_batch: int = 100,
     ) -> float:
-        """Modeled ops/s: pipelined batches gated by commit latency."""
-        lats = []
+        """Modeled ops/s: ``batches_in_flight`` batches pipelined through
+        one stitched leader-schedule stream per trace step.
+
+        The window closes when the last in-flight batch reaches quorum, so
+        ops/s = ops * batches / mean(last-batch commit).  The historical
+        model multiplied a *single* batch's mean commit latency by
+        ``batches_in_flight`` — linear scaling that ignored the leader's
+        NIC: on finite-bandwidth matrices it overstated throughput by up to
+        the full pipelining factor.  The stitched stream reduces to it
+        exactly at ``batches_in_flight=1`` and on infinite-bandwidth
+        matrices (no contention to model).
+        """
+        last = []
         for lat in trace:
             leader = int(self.rng.integers(0, self.n))
-            lats.append(self.commit_latency_ms(lat, leader, payload_bytes))
-        mean_commit = float(np.mean(lats))
-        return ops_per_batch * batches_in_flight / (mean_commit / 1e3)
+            last.append(self.pipelined_commit_ms(
+                lat, leader, payload_bytes, batches_in_flight))
+        if not last:
+            return 0.0
+        mean_last = float(np.mean(last))
+        if mean_last <= 0.0:
+            return 0.0
+        return ops_per_batch * batches_in_flight / (mean_last / 1e3)

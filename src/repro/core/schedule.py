@@ -388,7 +388,19 @@ def stitch_schedules(
     engine's bandwidth admission keeps epoch ``e+1`` exchanges from starving
     epoch-e scatters on a shared NIC while leaving the gather/scatter
     overlap intact (gathers ride member->aggregator NIC directions that
-    scatters never touch).
+    scatters never touch).  A corollary of admission: an earlier epoch's
+    measured times are final the moment that epoch is stitched — later
+    epochs' flows can never slow them — which is what lets the
+    staleness-feedback OCC loop re-simulate the stitched *prefix* as epochs
+    append and trust the per-node commit times it already consumed
+    (:func:`~repro.core.simulator.node_commit_ms` extracts exactly the
+    per-node commit dependency set this builder gates sends on).
+
+    Beyond the replication engine, :meth:`~repro.core.replication.RaftCluster.
+    pipelined_commit_ms` stitches ``batches_in_flight`` copies of a
+    ``leader_schedule`` (``epoch_ms=0``: no cadence clock) so in-flight
+    Raft batches serialize on the leader's NIC instead of replicating for
+    free.
     """
     if n is None:
         n = 0

@@ -78,7 +78,7 @@ import numpy as np
 
 from .schedule import Transfer, TransmissionSchedule
 
-__all__ = ["WANSimulator", "RoundResult"]
+__all__ = ["WANSimulator", "RoundResult", "node_commit_ms"]
 
 
 @dataclasses.dataclass
@@ -103,6 +103,40 @@ class RoundResult:
         """Alias for the makespan — under the event engine this is the DAG
         critical path, under ``barrier`` the phase-sum."""
         return self.makespan_ms
+
+
+def node_commit_ms(
+    schedule: TransmissionSchedule,
+    result: RoundResult,
+    n: int,
+    n_epochs: int | None = None,
+) -> np.ndarray:
+    """Per-node, per-epoch commit times of a simulated (stitched) schedule.
+
+    ``out[k, i]`` is the time node ``i`` commits epoch ``k``: the delivery of
+    every epoch-``k`` transfer *into* ``i`` (the same dependency set
+    :func:`~repro.core.schedule.stitch_schedules` gates node ``i``'s
+    epoch-``k+1`` sends on) joined with ``i``'s own epoch-``k`` local
+    execution stage.  Nodes that neither receive nor execute in an epoch
+    inherit their previous epoch's commit time (their view had nothing new
+    to wait for).  This is the measured staleness signal the
+    ``staleness_feedback`` OCC loop consumes: node ``i``'s snapshot view
+    may advance to epoch ``k`` only at ``out[k, i]``.
+    """
+    if n_epochs is None:
+        n_epochs = max((t.epoch for t in schedule.transfers), default=-1) + 1
+    out = np.full((max(n_epochs, 0), n), -np.inf)
+    for idx, t in enumerate(schedule.transfers):
+        if t.tag == "clock":
+            continue  # cadence stage: not owned by a real node
+        node = t.src if t.src == t.dst else t.dst
+        f = float(result.finish_ms[idx])
+        if f > out[t.epoch, node]:
+            out[t.epoch, node] = f
+    # a node silent in epoch k committed it the moment it committed k-1
+    out = np.maximum.accumulate(out, axis=0)
+    out[~np.isfinite(out)] = 0.0
+    return out
 
 
 class WANSimulator:

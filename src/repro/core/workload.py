@@ -30,6 +30,20 @@ __all__ = [
 ]
 
 
+def _node_snapshot(snapshot, node: int) -> DeltaCRDTStore | None:
+    """Resolve the snapshot a given node executes against.
+
+    ``snapshot`` is either one globally-merged store (every replica reads
+    fresh state — the pre-staleness model) or a per-node sequence of views
+    (``EngineConfig(staleness_feedback=True)``: each replica's view advances
+    only when the stitched simulation delivered that node's inbound epoch
+    transfers, so reads are versioned against possibly-stale state).
+    """
+    if snapshot is None or isinstance(snapshot, DeltaCRDTStore):
+        return snapshot
+    return snapshot[node]
+
+
 class ZipfianSampler:
     """Bounded Zipfian sampler: P(rank r) ∝ 1 / r^theta over n_keys items.
 
@@ -89,6 +103,10 @@ class YCSBGenerator:
             np.asarray(node_region) if node_region is not None else np.zeros(n_nodes, dtype=int)
         )
         self._txn_counter = 0
+        # node-local monotone commit sequence: Version = (epoch, seq, node)
+        # must be unique per transaction — a random draw can collide within
+        # (node, epoch), making two conflicting writers both "win" a key
+        self._seq = [0] * n_nodes
 
     def _value(self, rng: np.random.Generator) -> bytes:
         # structured (low-entropy) rows, like real DB records: an 8-byte
@@ -97,16 +115,43 @@ class YCSBGenerator:
         reps = max(1, self.cfg.value_bytes // 8)
         return (seed * reps)[: self.cfg.value_bytes]
 
+    def _write_value(self, snap: DeltaCRDTStore | None, key: str) -> bytes:
+        """The payload for one write op: a fresh value, or (with probability
+        ``rewrite_frac``, when the key exists in the node's view) a re-write
+        of its current value.
+
+        Randomness is drawn *unconditionally* so the RNG stream — and with
+        it every subsequent key sample and read/write split — is
+        independent of snapshot contents.  Per-node stale views
+        (``staleness_feedback``) may therefore change read versions and
+        rewrite *payloads* only, never which keys a transaction touches:
+        that is what keeps write-write aborts invariant and the abort set
+        monotone in staleness.
+        """
+        val = self._value(self.rng)
+        if self.cfg.rewrite_frac > 0.0:
+            rewrite = self.rng.random() < self.cfg.rewrite_frac
+            cur = snap.get(key) if snap is not None else None
+            if rewrite and cur is not None:
+                return cur
+        return val
+
     def epoch_txns(
         self,
         epoch: int,
         txns_per_node: int,
-        snapshot: DeltaCRDTStore | None = None,
+        snapshot: DeltaCRDTStore | Sequence[DeltaCRDTStore] | None = None,
     ) -> dict[int, list[Txn]]:
-        """One epoch's transactions for every node: {node: [Txn, ...]}."""
+        """One epoch's transactions for every node: {node: [Txn, ...]}.
+
+        ``snapshot`` is a single globally-merged store or a per-node sequence
+        of snapshot views (see :func:`_node_snapshot`); reads are versioned
+        against the executing node's view.
+        """
         cfg = self.cfg
         out: dict[int, list[Txn]] = {}
         for node in range(self.n_nodes):
+            snap = _node_snapshot(snapshot, node)
             txns: list[Txn] = []
             for _ in range(txns_per_node):
                 keys = self.sampler.sample(self.rng, cfg.ops_per_txn)
@@ -116,8 +161,8 @@ class YCSBGenerator:
                     if self.rng.random() < cfg.read_ratio:
                         key = f"k{int(k)}"
                         ver = (
-                            snapshot.version_of(key)
-                            if snapshot is not None
+                            snap.version_of(key)
+                            if snap is not None
                             else Version.ZERO
                         )
                         reads.append((key, ver))
@@ -131,27 +176,11 @@ class YCSBGenerator:
                                 key = f"h{int(self.node_region[node])}:{h}"
                             else:
                                 key = f"k{h}"
-                            cur = snapshot.get(key) if snapshot is not None else None
-                            if (
-                                cfg.rewrite_frac > 0.0
-                                and cur is not None
-                                and self.rng.random() < cfg.rewrite_frac
-                            ):
-                                writes.append((key, cur))
-                            else:
-                                writes.append((key, self._value(self.rng)))
-                            continue
-                        key = f"k{int(k)}"
-                        cur = snapshot.get(key) if snapshot is not None else None
-                        if (
-                            cfg.rewrite_frac > 0.0
-                            and cur is not None
-                            and self.rng.random() < cfg.rewrite_frac
-                        ):
-                            writes.append((key, cur))
                         else:
-                            writes.append((key, self._value(self.rng)))
-                seq = int(self.rng.integers(0, 1_000_000_000))
+                            key = f"k{int(k)}"
+                        writes.append((key, self._write_value(snap, key)))
+                seq = self._seq[node]
+                self._seq[node] += 1
                 txns.append(
                     Txn(
                         txn_id=self._txn_counter,
@@ -209,6 +238,10 @@ class TPCCGenerator:
         self.n_nodes = n_nodes
         self.rng = np.random.default_rng(seed)
         self._txn_counter = 0
+        # node-local monotone commit sequence (see YCSBGenerator): a random
+        # seq can collide within (node, epoch) and hand two conflicting
+        # writers the same Version
+        self._seq = [0] * n_nodes
         self.neworder_ids: set[int] = set()
         # warehouses are partitioned across nodes (home warehouses)
         self.home = np.array_split(np.arange(cfg.n_warehouses), n_nodes)
@@ -220,12 +253,13 @@ class TPCCGenerator:
         self,
         epoch: int,
         txns_per_node: int,
-        snapshot: DeltaCRDTStore | None = None,
+        snapshot: DeltaCRDTStore | Sequence[DeltaCRDTStore] | None = None,
     ) -> dict[int, list[Txn]]:
         cfg = self.cfg
         probs = np.array(TPCC_MIXES[cfg.mix])
         out: dict[int, list[Txn]] = {}
         for node in range(self.n_nodes):
+            snap = _node_snapshot(snapshot, node)
             homes = self.home[node]
             txns: list[Txn] = []
             for _ in range(txns_per_node):
@@ -249,12 +283,13 @@ class TPCCGenerator:
                     item = int(self.rng.integers(0, cfg.items_per_warehouse))
                     key = self._key(w, item)
                     ver = (
-                        snapshot.version_of(key)
-                        if snapshot is not None
+                        snap.version_of(key)
+                        if snap is not None
                         else Version.ZERO
                     )
                     reads.append((key, ver))
-                seq = int(self.rng.integers(0, 1_000_000_000))
+                seq = self._seq[node]
+                self._seq[node] += 1
                 txns.append(
                     Txn(
                         txn_id=self._txn_counter,

@@ -2,7 +2,13 @@ import numpy as np
 import pytest
 
 from repro.core.crdt import DeltaCRDTStore, Update, Version, merge_updates
-from repro.core.occ import Txn, committed_updates, txn_updates, validate_epoch
+from repro.core.occ import (
+    Txn,
+    committed_updates,
+    txn_updates,
+    validate_epoch,
+    validate_epoch_detailed,
+)
 
 
 def _u(key, val, epoch, seq, node=0, txn=0):
@@ -112,3 +118,67 @@ def test_committed_updates_apply_cleanly():
     s = DeltaCRDTStore()
     s.apply_many(ups)
     assert s.get("a") == b"1" and s.get("b") == b"2"
+
+
+def test_validate_detailed_breakdown():
+    """read_aborted / ww_aborted report which rule fired; a transaction can
+    fail both, so the sets may overlap and `aborted` is their union."""
+    snap = DeltaCRDTStore()
+    snap.apply(_u("r", b"v", 0, 5))
+    stale_read = [("r", Version(0, 1, 0))]
+    t_ok = _txn(1, 0, 1, [("a", b"1")], epoch=1)
+    t_read = _txn(2, 1, 1, [("b", b"2")], reads=stale_read, epoch=1)
+    t_ww = _txn(3, 2, 2, [("a", b"3")], epoch=1)            # loses "a" to t1
+    t_both = _txn(4, 3, 3, [("a", b"4")], reads=stale_read, epoch=1)
+    res = validate_epoch_detailed([t_ok, t_read, t_ww, t_both], snap)
+    assert res.committed == {1}
+    assert res.read_aborted == {2, 4}
+    assert res.ww_aborted == {3, 4}
+    assert res.aborted == {2, 3, 4}
+    # the compat wrapper agrees
+    committed, aborted = validate_epoch([t_ok, t_read, t_ww, t_both], snap)
+    assert committed == {1} and aborted == {2, 3, 4}
+
+
+def test_forced_version_collision_single_winner():
+    """Regression (duplicate-seq bug): two same-node same-epoch txns sharing
+    a Version used to *both* match the winner map and both commit
+    conflicting writes to the same key.  Ties now break on txn_id: exactly
+    one writer wins, the other aborts."""
+    a = _txn(10, 0, 7, [("k", b"a")])
+    b = _txn(11, 0, 7, [("k", b"b")])  # forced (epoch, seq, node) collision
+    assert a.version == b.version
+    committed, aborted = validate_epoch([a, b])
+    assert committed == {10} and aborted == {11}
+    ups, _ = committed_updates([a, b])
+    assert [u.value for u in ups if u.key == "k"] == [b"a"]
+    # order-independent: the same txn wins whichever arrives first
+    committed2, aborted2 = validate_epoch([b, a])
+    assert committed2 == {10} and aborted2 == {11}
+
+
+def test_winner_map_includes_read_aborted_writers():
+    """Pinned semantics (no reinstatement): a read-aborted transaction still
+    *wins* the keys it wrote first — a later writer of the same key aborts
+    even though the winner itself never commits, and the key ends the epoch
+    with no committed write.  This is what makes the abort set monotone in
+    read staleness: adding read-aborts can never reinstate a write-write
+    loser."""
+    snap = DeltaCRDTStore()
+    snap.apply(_u("r", b"v", 0, 9))
+    # t1 wrote "k" first but read "r" stale; t2 wrote "k" later, reads fresh
+    t1 = _txn(1, 0, 1, [("k", b"1")], reads=[("r", Version(0, 1, 0))], epoch=1)
+    t2 = _txn(2, 1, 2, [("k", b"2")], reads=[("r", Version(0, 9, 0))], epoch=1)
+    res = validate_epoch_detailed([t1, t2], snap)
+    assert res.read_aborted == {1}
+    assert res.ww_aborted == {2}          # t2 lost "k" to the aborted t1
+    assert res.committed == set()
+    ups, _ = committed_updates([t1, t2], snap)
+    assert not ups                         # "k" gets no committed write
+    # monotonicity of the pinned semantics: make t1's read fresh and the
+    # abort set strictly shrinks (fresh-view aborts ⊆ stale-view aborts)
+    t1_fresh = _txn(1, 0, 1, [("k", b"1")], reads=[("r", Version(0, 9, 0))],
+                    epoch=1)
+    res_fresh = validate_epoch_detailed([t1_fresh, t2], snap)
+    assert res_fresh.aborted == {2}
+    assert set(res_fresh.aborted) <= set(res.aborted)

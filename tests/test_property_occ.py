@@ -1,0 +1,144 @@
+"""Hypothesis property tests for the staleness-aware OCC model.
+
+Two load-bearing invariants of the staleness_feedback work:
+
+* **Engine independence of commit content** (default off): for any small
+  workload/topology, `state_digest`/`value_digest` are byte-identical
+  across the barrier, event and streaming engines — the engines change
+  when bytes move, never which bytes commit.
+* **Staleness monotonicity**: for the *same* transaction stream, versioning
+  reads against older snapshots only ever *adds* aborts — the abort set
+  under stale views is a superset of the abort set under fresh views, and
+  the write-write abort set is unchanged.  This holds because the winner
+  map includes read-aborted writers (no reinstatement; pinned in
+  ``tests/test_crdt_occ.py``).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; see requirements-dev.txt")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import (
+    DeltaCRDTStore,
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    Update,
+    Version,
+    YCSBConfig,
+    YCSBGenerator,
+    geo_clustered_matrix,
+    jitter_trace,
+)
+from repro.core.occ import Txn, validate_epoch_detailed
+
+
+# ---------------------------------------------------------------------------
+# staleness monotonicity
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def epoch_with_stale_variant(draw):
+    """A snapshot, a txn stream with fresh read versions, and the same
+    stream with a random subset of reads re-versioned strictly older."""
+    n_keys = draw(st.integers(2, 8))
+    keys = [f"k{i}" for i in range(n_keys)]
+    snap = DeltaCRDTStore()
+    for i, k in enumerate(keys):
+        if draw(st.booleans()):
+            snap.apply(Update(k, b"v", Version(0, draw(st.integers(1, 50)), i % 3)))
+    n_txns = draw(st.integers(1, 12))
+    fresh: list[Txn] = []
+    stale: list[Txn] = []
+    seq = 0
+    for tid in range(n_txns):
+        node = draw(st.integers(0, 2))
+        writes = tuple(
+            (k, bytes([tid])) for k in draw(
+                st.lists(st.sampled_from(keys), max_size=3, unique=True)
+            )
+        )
+        reads_f = []
+        reads_s = []
+        for k in draw(st.lists(st.sampled_from(keys), max_size=3, unique=True)):
+            ver = snap.version_of(k)
+            reads_f.append((k, ver))
+            if draw(st.booleans()) and ver > Version.ZERO:
+                # strictly older view of this key
+                older = draw(st.sampled_from(
+                    [Version.ZERO, Version(ver.epoch, ver.seq - 1, ver.node)]
+                ))
+                reads_s.append((k, older))
+            else:
+                reads_s.append((k, ver))
+        seq += 1
+        base = dict(txn_id=tid, node=node, epoch=1, seq=seq)
+        fresh.append(Txn(**base, read_set=tuple(reads_f), write_set=writes))
+        stale.append(Txn(**base, read_set=tuple(reads_s), write_set=writes))
+    return snap, fresh, stale
+
+
+@given(epoch_with_stale_variant())
+@settings(max_examples=200, deadline=None)
+def test_stale_views_only_add_aborts(case):
+    snap, fresh, stale = case
+    rf = validate_epoch_detailed(fresh, snap)
+    rs = validate_epoch_detailed(stale, snap)
+    # fresh reads (versioned at the validation snapshot) never read-abort
+    assert rf.read_aborted == frozenset()
+    # write-write outcome is a function of write sets alone: unchanged
+    assert rs.ww_aborted == rf.ww_aborted
+    # staleness is monotone: aborts only ever accrue
+    assert rf.aborted <= rs.aborted
+    assert rs.committed <= rf.committed
+
+
+# ---------------------------------------------------------------------------
+# three-engine digest identity (default staleness_feedback=False)
+# ---------------------------------------------------------------------------
+
+
+def _engine_run(*, barrier, streaming, n, epochs, bw, theta, seed):
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=2), np.random.default_rng(seed)
+    )
+    trace = jitter_trace(lat, epochs, np.random.default_rng(seed + 1))
+    wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    bwm = np.where(wan, bw, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    cfg = EngineConfig(n_nodes=n, barrier=barrier, streaming=streaming,
+                       grouping=True, filtering=True, tiv=True,
+                       planner="kcenter", epoch_ms=2.0)
+    eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=11)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=60, theta=theta, read_ratio=0.4,
+                   hot_write_frac=0.3, hot_locality=True),
+        n, seed=seed + 2, node_region=regions,
+    )
+    return eng.run(gen, trace, txns_per_node=4, n_epochs=epochs)
+
+
+@given(
+    n=st.integers(3, 6),
+    epochs=st.integers(2, 4),
+    bw=st.sampled_from([np.inf, 200.0, 20.0]),
+    theta=st.sampled_from([0.3, 0.9]),
+    seed=st.integers(0, 50),
+)
+@settings(max_examples=10, deadline=None)
+def test_engines_commit_identical_state_by_default(n, epochs, bw, theta, seed):
+    kw = dict(n=n, epochs=epochs, bw=bw, theta=theta, seed=seed)
+    ba = _engine_run(barrier=True, streaming=False, **kw)
+    ev = _engine_run(barrier=False, streaming=False, **kw)
+    stm = _engine_run(barrier=False, streaming=True, **kw)
+    assert ba.state_digest == ev.state_digest == stm.state_digest
+    assert ba.value_digest == ev.value_digest == stm.value_digest
+    assert ba.committed == ev.committed == stm.committed
+    # and the read rule stays vacuous: every abort is write-write
+    for rs in (ba, ev, stm):
+        assert rs.read_aborts == 0

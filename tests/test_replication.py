@@ -196,6 +196,73 @@ def test_raft_event_engine_charges_nic_contention():
     assert ev > cf
 
 
+def _linear_model_throughput(n, tr, *, grouping, tiv, bandwidth_mbps=np.inf,
+                             payload_bytes=64_000.0, batches_in_flight=8,
+                             ops_per_batch=100, seed=0):
+    """The pre-fix throughput model: ops * batches / mean single-batch
+    commit — linear in batches_in_flight, blind to the leader's NIC.
+    Reconstructed here (same leader draws) as the regression reference."""
+    rc = RaftCluster(n, grouping=grouping, tiv=tiv,
+                     bandwidth_mbps=bandwidth_mbps, seed=seed)
+    lats = []
+    for lat in tr:
+        leader = int(rc.rng.integers(0, n))
+        lats.append(rc.commit_latency_ms(lat, leader, payload_bytes))
+    return ops_per_batch * batches_in_flight / (float(np.mean(lats)) / 1e3)
+
+
+def test_raft_throughput_not_linear_in_batches_under_bandwidth():
+    """Pinned regression: on a bandwidth-constrained matrix the old linear
+    model overstates ops/s — the stitched leader-schedule stream charges
+    the leader's NIC for every in-flight batch."""
+    n = 9
+    tr, _ = _trace(n, 4, seed=11)
+    kw = dict(payload_bytes=256_000.0, batches_in_flight=8)
+    rc = RaftCluster(n, grouping=False, tiv=False, bandwidth_mbps=50.0)
+    measured = rc.throughput(tr, **kw)
+    linear = _linear_model_throughput(n, tr, grouping=False, tiv=False,
+                                      bandwidth_mbps=50.0, **kw)
+    assert measured < linear * 0.9
+    # more batches in flight can never *reduce* modeled ops/s (the stream
+    # only appends work), but gains saturate at the NIC ceiling
+    rc2 = RaftCluster(n, grouping=False, tiv=False, bandwidth_mbps=50.0)
+    single = rc2.throughput(tr, payload_bytes=256_000.0, batches_in_flight=1)
+    assert single <= measured * (1.0 + 1e-9)
+    assert measured < single * 8
+
+
+def test_raft_throughput_exact_at_one_batch():
+    """batches_in_flight=1 reduces exactly to the single-batch commit model
+    (same leader draws, same memoized event-engine path)."""
+    n = 9
+    tr, _ = _trace(n, 4, seed=13)
+    for grouping, tiv, bw in ((False, False, 50.0), (True, True, np.inf)):
+        rc = RaftCluster(n, grouping=grouping, tiv=tiv, bandwidth_mbps=bw)
+        measured = rc.throughput(tr, payload_bytes=64_000.0,
+                                 batches_in_flight=1)
+        linear = _linear_model_throughput(
+            n, tr, grouping=grouping, tiv=tiv, bandwidth_mbps=bw,
+            payload_bytes=64_000.0, batches_in_flight=1)
+        assert measured == pytest.approx(linear, rel=1e-12)
+
+
+def test_raft_throughput_exact_on_contention_free_matrices():
+    """On infinite-bandwidth matrices every batch streams at propagation
+    speed: the last in-flight batch commits exactly when a single batch
+    would, so the stitched stream agrees with the linear model exactly —
+    the fix only bites where there is contention to model."""
+    n = 9
+    tr, _ = _trace(n, 3, seed=17)
+    for grouping, tiv in ((False, False), (True, True)):
+        rc = RaftCluster(n, grouping=grouping, tiv=tiv)
+        measured = rc.throughput(tr, payload_bytes=256_000.0,
+                                 batches_in_flight=8)
+        linear = _linear_model_throughput(
+            n, tr, grouping=grouping, tiv=tiv,
+            payload_bytes=256_000.0, batches_in_flight=8)
+        assert measured == pytest.approx(linear, rel=1e-9)
+
+
 def test_planner_damping_limits_replans():
     rs = _run(6, grouping=True, filtering=True, epochs=12)
     # with mild jitter the damped replanner should not replan every epoch;

@@ -1,0 +1,210 @@
+"""Staleness-aware OCC feedback loop (``EngineConfig(staleness_feedback=True)``).
+
+The loop under test: the stitched streaming simulation measures per-node
+commit times -> each node's snapshot view advances only when its inbound
+epoch transfers have delivered -> the workload generators version reads
+against *their node's* view -> read-set validation aborts become a function
+of network conditions.  Default off: digests stay byte-identical across all
+three engines (barrier / event / streaming).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeltaCRDTStore,
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    TPCCConfig,
+    TPCCGenerator,
+    Update,
+    Version,
+    YCSBConfig,
+    YCSBGenerator,
+    geo_clustered_matrix,
+    jitter_trace,
+)
+
+
+def _setup(n=5, epochs=8, seed=1):
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=2), np.random.default_rng(seed)
+    )
+    trace = jitter_trace(lat, epochs, np.random.default_rng(seed + 1))
+    wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    return lat, regions, trace, wan
+
+
+def _run(*, barrier=False, streaming=False, feedback=False, epoch_ms=2.0,
+         bw=20.0, n=5, epochs=8, txns=10, seed=7):
+    """TPC-C run on a WAN-constrained 2-region topology.  bw=20 Mbps keeps
+    sync makespan above the 2 ms cadence, so feedback mode accrues a real
+    backlog (the regime the paper's abort-vs-latency coupling lives in)."""
+    _, regions, trace, wan = _setup(n=n, epochs=epochs)
+    bwm = np.where(wan, bw, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    cfg = EngineConfig(
+        n_nodes=n, barrier=barrier, streaming=streaming,
+        staleness_feedback=feedback, grouping=True, filtering=True,
+        tiv=True, planner="kcenter", epoch_ms=epoch_ms,
+    )
+    eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=seed)
+    gen = TPCCGenerator(
+        TPCCConfig(n_warehouses=20, mix="TPCC-A", remote_prob=0.25,
+                   items_per_warehouse=20),
+        n, seed=3,
+    )
+    return eng.run(gen, trace, txns_per_node=txns, n_epochs=epochs)
+
+
+def test_feedback_requires_streaming():
+    """Staleness is measured from the stitched multi-epoch simulation, so
+    the flag is rejected without it (and with the barrier engine, which
+    streaming already excludes)."""
+    with pytest.raises(ValueError, match="staleness_feedback"):
+        EngineConfig(n_nodes=4, staleness_feedback=True)
+    with pytest.raises(ValueError, match="streaming"):
+        EngineConfig(n_nodes=4, staleness_feedback=True, streaming=True,
+                     barrier=True)
+
+
+def test_default_off_digests_identical_across_engines():
+    """The regression gate: with staleness_feedback=False (default) the
+    committed state is byte-identical across barrier, event and streaming
+    engines, and every abort is a write-write abort (the read rule is
+    vacuous when reads are versioned against the globally-merged store)."""
+    ba = _run(barrier=True)
+    ev = _run()
+    st = _run(streaming=True)
+    assert ba.state_digest == ev.state_digest == st.state_digest
+    assert ba.value_digest == ev.value_digest == st.value_digest
+    assert ba.committed == ev.committed == st.committed
+    for rs in (ba, ev, st):
+        assert rs.read_aborts == 0
+        assert rs.ww_aborts == rs.aborted
+
+
+def test_feedback_only_adds_read_aborts():
+    """Same transaction stream (TPC-C generation never branches on snapshot
+    *values*): write-write aborts are identical per epoch, the read rule
+    adds aborts on top, and the committed count can only shrink."""
+    off = _run(streaming=True)
+    on = _run(streaming=True, feedback=True)
+    assert on.total_txns == off.total_txns
+    for e_off, e_on in zip(off.epochs, on.epochs):
+        assert e_on.ww_aborts == e_off.ww_aborts
+        assert e_off.read_aborts == 0
+        assert e_on.aborted >= e_off.aborted
+    assert on.read_aborts > 0
+    assert on.committed < off.committed
+
+
+def test_feedback_only_adds_read_aborts_ycsb_rewrites():
+    """The YCSB generator draws its randomness unconditionally, so even with
+    rewrite_frac > 0 (where write *payloads* consult the node's view) the
+    txn structure — keys touched, read/write split — is independent of view
+    staleness: write-write aborts stay invariant under feedback.  Regression
+    for the snapshot-dependent RNG-consumption bug."""
+    _, regions, trace, wan = _setup()
+    bwm = np.where(wan, 20.0, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    runs = {}
+    for feedback in (False, True):
+        cfg = EngineConfig(n_nodes=5, streaming=True,
+                           staleness_feedback=feedback, grouping=True,
+                           filtering=True, tiv=True, planner="kcenter",
+                           epoch_ms=2.0)
+        eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=7)
+        gen = YCSBGenerator(
+            YCSBConfig(n_keys=300, theta=0.9, read_ratio=0.4,
+                       hot_write_frac=0.3, rewrite_frac=0.2,
+                       hot_locality=True),
+            5, seed=3, node_region=regions,
+        )
+        runs[feedback] = eng.run(gen, trace, txns_per_node=10, n_epochs=8)
+    off, on = runs[False], runs[True]
+    assert on.total_txns == off.total_txns
+    for e_off, e_on in zip(off.epochs, on.epochs):
+        assert e_on.ww_aborts == e_off.ww_aborts
+        assert e_on.aborted >= e_off.aborted
+    assert on.read_aborts > 0
+
+
+def test_feedback_view_lag_tracks_wan_backlog():
+    """At a cadence far below the sync makespan the views fall behind
+    (lag grows with the backlog) and stale reads abort; at a cadence above
+    it every view is fresh by the next arrival — zero lag, zero read
+    aborts, and the run is byte-identical to the feedback-off engine."""
+    tight = _run(streaming=True, feedback=True, epoch_ms=2.0)
+    assert max(e.view_lag_max for e in tight.epochs) >= 2
+    assert tight.read_aborts > 0
+
+    slack = _run(streaming=True, feedback=True, epoch_ms=2_000.0)
+    assert all(e.view_lag_max == 0 for e in slack.epochs)
+    assert slack.read_aborts == 0
+    ref = _run(streaming=True, epoch_ms=2_000.0)
+    assert slack.state_digest == ref.state_digest
+    assert slack.value_digest == ref.value_digest
+
+
+def test_feedback_abort_rate_falls_with_cadence():
+    """The Fig-style coupling: read-abort rate is non-increasing in
+    epoch_ms (more cadence slack -> less stale views) and strictly lower at
+    the slack end than at the tight end."""
+    rates = []
+    for ems in (2.0, 20.0, 2_000.0):
+        rs = _run(streaming=True, feedback=True, epoch_ms=ems)
+        rates.append(rs.read_abort_rate)
+    assert all(a >= b - 1e-12 for a, b in zip(rates, rates[1:]))
+    assert rates[0] > rates[-1]
+    assert rates[-1] == 0.0
+
+
+def test_generators_version_reads_against_node_views():
+    """Per-node snapshot views: each node's reads carry the version its own
+    view holds, not the global store's."""
+    fresh = DeltaCRDTStore()
+    for k in range(50):
+        fresh.apply(Update(f"k{k}", b"v", Version(3, k, 0)))
+    stale = DeltaCRDTStore()  # node 0's view: saw nothing yet
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=50, theta=0.1, read_ratio=1.0), 2, seed=0
+    )
+    txns = gen.epoch_txns(4, 10, snapshot=[stale, fresh])
+    for t in txns[0]:
+        for _, ver in t.read_set:
+            assert ver == Version.ZERO
+    seen = [ver for t in txns[1] for _, ver in t.read_set]
+    assert seen and all(v.epoch == 3 for v in seen)
+    # a single store still applies to every node (back-compat)
+    txns_one = gen.epoch_txns(5, 5, snapshot=fresh)
+    for ts in txns_one.values():
+        for t in ts:
+            for _, ver in t.read_set:
+                assert ver.epoch == 3
+
+
+@pytest.mark.parametrize("make", [
+    lambda n: YCSBGenerator(YCSBConfig(n_keys=100, theta=0.5, read_ratio=0.4),
+                            n, seed=5),
+    lambda n: TPCCGenerator(TPCCConfig(n_warehouses=12), n, seed=5),
+])
+def test_generator_seq_is_node_local_monotone(make):
+    """Regression (duplicate-seq bug): `seq` was a random draw, so two
+    same-node same-epoch txns could share a Version.  Now it is a
+    node-local monotone counter: versions are unique and ordered by
+    generation within a node."""
+    n = 3
+    gen = make(n)
+    last = {}
+    seen = set()
+    for epoch in range(4):
+        txns = gen.epoch_txns(epoch, 40)
+        for node, ts in txns.items():
+            for t in ts:
+                key = (t.epoch, t.seq, t.node)
+                assert key not in seen, "duplicate Version emitted"
+                seen.add(key)
+                assert t.seq > last.get(node, -1)
+                last[node] = t.seq
