@@ -25,7 +25,8 @@ from .common import check, paper_testbed
 
 def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
               streaming: bool = False, staleness_feedback: bool = False,
-              epoch_ms: float = 10.0, planner: str = "milp"):
+              epoch_ms: float = 10.0, planner: str = "milp",
+              modeled_cpu: bool = False, serve=None, txns_per_node: int = 40):
     """Paper regime: Alibaba-cloud 5-node testbed, WAN bandwidth in the
     Fig. 3 constrained band (~15 Mbps to HK), 100 warehouses with hot item
     contention "to stress inter-node coordination" (Sec 6.3)."""
@@ -38,6 +39,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
         n_nodes=n, grouping=grouping, filtering=grouping, tiv=grouping,
         planner=planner, epoch_ms=epoch_ms, streaming=streaming,
         staleness_feedback=staleness_feedback,
+        modeled_cpu=modeled_cpu, serve=serve,
     )
     wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     eng = GeoCluster(
@@ -49,7 +51,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
                    items_per_warehouse=50),
         n, seed=seed,
     )
-    rs = eng.run(gen, trace, txns_per_node=40, n_epochs=epochs)
+    rs = eng.run(gen, trace, txns_per_node=txns_per_node, n_epochs=epochs)
     tpm_total = rs.throughput_tps * 60.0
     return rs, tpm_total
 

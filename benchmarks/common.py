@@ -97,10 +97,11 @@ def run_engine(
     value_bytes: int = 100,
     planner: str = "milp",
     seed: int = 7,
+    modeled_cpu: bool = False,
 ):
     cfg = EngineConfig(
         n_nodes=n, grouping=grouping, filtering=filtering, tiv=tiv,
-        compression=compression, planner=planner,
+        compression=compression, planner=planner, modeled_cpu=modeled_cpu,
     )
     wan_mask = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     if np.isscalar(bandwidth) and np.isfinite(bandwidth):

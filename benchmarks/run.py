@@ -27,6 +27,7 @@ from . import (
     bench_makespan_cdf,
     bench_makespan_regression,
     bench_scaling_cost_benefit,
+    bench_serving,
     bench_skew,
     bench_sync_strategies,
     bench_throughput,
@@ -44,6 +45,9 @@ MODULES = [
     # staleness-aware OCC: measured commit staleness -> read-abort rate;
     # gates the abort-vs-cadence coupling and the default-off digest identity
     ("abort-curve", bench_abort_curve),
+    # read serving plane over the same measured staleness: bounded follower
+    # reads, redirect/reject policies, geococo-vs-flat serving throughput
+    ("serving", bench_serving),
     ("Fig12", bench_grouping_strategies),
     ("Fig13", bench_scaling_cost_benefit),
     ("Fig14+Table1", bench_bandwidth_filtering),
@@ -85,6 +89,17 @@ def main() -> None:
             "raft_throughput": "batches pipelined through one stitched "
                                "leader-schedule stream (leader-NIC "
                                "contention; no linear batch scaling)",
+        },
+        "serve": {
+            "plane": "staleness-bounded follower reads on per-node views "
+                     "at measured node_commit_ms times (streaming-only, "
+                     "observer: digest/timing-neutral)",
+            "policies": "redirect (freshest replica, RTT from the trace) "
+                        "/ reject",
+            "clients": "analytic region-affine populations (1M/node in "
+                       "bench_serving); cache-aside hit mass = top-k Zipf",
+            "modeled_cpu": "bytes-proportional filter/zlib CPU for gated "
+                           "runs (Fig16 + abort-curve tolerances now exact)",
         },
     }
     n_pass = n_fail = n_err = 0

@@ -81,6 +81,12 @@ from .schedule import (
 from .simulator import WANSimulator, node_commit_ms
 from .whitedata import FilterResult, FilterStats, filter_group_batch
 
+# the serving plane lives above this engine (it consumes measured commit
+# times, never feeds back into them); importing its config here keeps
+# EngineConfig the single wiring surface, like staleness_feedback
+from ..serve.config import ServeConfig
+from ..serve.stats import ServeStats
+
 __all__ = ["EngineConfig", "EpochStats", "RunStats", "GeoCluster", "RaftCluster"]
 
 
@@ -112,6 +118,22 @@ class EngineConfig:
     # the default (off) preserves the byte-identical-digest invariant
     # across barrier/event/streaming engines.
     staleness_feedback: bool = False
+    # read serving plane (streaming only, default off): region-affine client
+    # populations serve follower reads against the per-node stale views the
+    # stitched simulation measures; results land on RunStats.serve.  Purely
+    # observational — serving never changes which bytes commit, so digests
+    # are unaffected.
+    serve: ServeConfig | None = None
+    # modeled bytes-proportional filter/compress CPU instead of measured
+    # perf_counter wall-clock (opt-in): gated benchmarks whose metric rides
+    # the simulated timeline (Fig16 stacking, abort-curve monotonicity)
+    # become fully deterministic under harness load.  Rates are ns/byte of
+    # filter input / compressor input respectively (zlib-6 streams at
+    # ~60-70 MB/s on commodity cores -> ~15 ns/B; the filter's per-update
+    # hash+version checks are ~2 ns/B).
+    modeled_cpu: bool = False
+    filter_cpu_ns_per_byte: float = 2.0
+    compress_cpu_ns_per_byte: float = 15.0
     sync_strategy: str | None = None   # named wan_sync preset (overrides booleans)
     grouping: bool = True              # GeoCoCo hierarchical transmission
     filtering: bool = True             # white-data filter at aggregators
@@ -144,6 +166,12 @@ class EngineConfig:
                 "staleness_feedback=True requires streaming=True: per-node "
                 "view staleness is measured from the stitched multi-epoch "
                 "simulation's per-node commit times"
+            )
+        if self.serve is not None and not self.streaming:
+            raise ValueError(
+                "serve=ServeConfig(...) requires streaming=True: the serving "
+                "plane reads per-node view staleness off the stitched "
+                "multi-epoch simulation's measured commit times"
             )
         if self.sync_strategy is not None:
             spec = _strategies.get("wan_sync", self.sync_strategy)
@@ -246,6 +274,9 @@ class RunStats:
     plan_time_s: float
     state_digest: str
     value_digest: str
+    # the serving plane's report (EngineConfig(serve=...), streaming only);
+    # None when the plane is off
+    serve: ServeStats | None = None
 
     @property
     def committed(self) -> int:
@@ -485,11 +516,21 @@ class GeoCluster:
         epoch: int,
         txns_by_node: dict[int, list[Txn]],
         lat: np.ndarray,
+        views: Sequence[DeltaCRDTStore] | None = None,
     ) -> "_EpochRound":
         """Everything timing-independent about one epoch: planning, filtering,
         schedule construction, deterministic validation and the CRDT commit.
         The simulator never touches the store, so commit content is identical
         whichever engine (barrier / event / streaming) later times the round.
+
+        ``views`` (staleness_feedback only) are the per-node snapshot views;
+        when given, each group's aggregator filters against *its own* view
+        instead of the globally-merged store — a backlogged aggregator holds
+        smaller versions, so its stale/null-effect rules fire less and filter
+        efficacy degrades with network conditions (the rules stay sound: a
+        version stale against an older snapshot is stale against any newer
+        one).  Validation always runs against the globally-merged snapshot —
+        every replica holds the full epoch's metadata by commit time.
         """
         cfg = self.cfg
         n = cfg.n_nodes
@@ -535,12 +576,22 @@ class GeoCluster:
             fstats = FilterStats()
             for j, (group, agg) in enumerate(zip(plan.groups, plan.aggregators)):
                 gtxns = [t for i in group for t in txns_by_node.get(i, [])]
+                # the aggregator filters against the state *it* holds: its
+                # own (possibly stale) view under staleness_feedback, the
+                # globally-merged store otherwise
+                fsnap = snapshot if views is None else views[agg]
                 t0 = time.perf_counter()
-                fr = self._filter_fn(gtxns, snapshot)
+                fr = self._filter_fn(gtxns, fsnap)
                 if cfg.filtering:
                     # the no_filter passthrough's byte accounting is not a
                     # filtering cost — keep the baseline's filter CPU at 0
-                    dt_ms = (time.perf_counter() - t0) * 1e3
+                    if cfg.modeled_cpu:
+                        dt_ms = (
+                            fr.stats.total_bytes
+                            * cfg.filter_cpu_ns_per_byte / 1e6
+                        )
+                    else:
+                        dt_ms = (time.perf_counter() - t0) * 1e3
                     filter_cpu_ms += dt_ms
                     group_cpu_ms[j] += dt_ms
                 fstats = fstats.merge(fr.stats)
@@ -550,7 +601,13 @@ class GeoCluster:
                     group_payload[j] = _compressed_size(
                         fr.kept, cfg.compression_level
                     ) + 24 * dropped
-                    group_cpu_ms[j] += (time.perf_counter() - t0) * 1e3
+                    if cfg.modeled_cpu:
+                        group_cpu_ms[j] += (
+                            sum(u.nbytes for u in fr.kept)
+                            * cfg.compress_cpu_ns_per_byte / 1e6
+                        )
+                    else:
+                        group_cpu_ms[j] += (time.perf_counter() - t0) * 1e3
                 else:
                     group_payload[j] = fr.stats.wire_bytes
             if cfg.compression:
@@ -748,9 +805,11 @@ class GeoCluster:
         n_epochs: int | None = None,
     ) -> RunStats:
         n_epochs = n_epochs if n_epochs is not None else len(trace)
+        serve_stats = None
         if self.cfg.streaming:
-            epochs = self._run_streaming(generator, trace, txns_per_node,
-                                         n_epochs)
+            epochs, serve_stats = self._run_streaming(
+                generator, trace, txns_per_node, n_epochs
+            )
         else:
             epochs = []
             for e in range(n_epochs):
@@ -763,6 +822,7 @@ class GeoCluster:
             plan_time_s=self.plan_time_s,
             state_digest=self.store.digest(),
             value_digest=self.store.digest(values_only=True),
+            serve=serve_stats,
         )
 
     def _stream_prefix(self, rounds: list["_EpochRound"]):
@@ -804,7 +864,7 @@ class GeoCluster:
 
     def _run_streaming(
         self, generator, trace, txns_per_node: int, n_epochs: int
-    ) -> list[EpochStats]:
+    ) -> tuple[list[EpochStats], ServeStats | None]:
         """Cross-epoch streaming: stitch every epoch's DAG and measure real
         per-epoch commit times from one event-driven simulation.
 
@@ -856,7 +916,7 @@ class GeoCluster:
             else:
                 snapshot = self.store
             txns = generator.epoch_txns(e, txns_per_node, snapshot=snapshot)
-            rnd = self._prepare_epoch(e, txns, lat)
+            rnd = self._prepare_epoch(e, txns, lat, views=views)
             sim = WANSimulator(lat, self.bandwidth, loss=self.loss,
                                rng=self.rng)
             res = sim.run(rnd.schedule)
@@ -869,10 +929,10 @@ class GeoCluster:
                 # iteration's prefix is the full stream the stats consume
                 commit_ms, stream, stitched = self._stream_prefix(rounds)
         if not rounds:
-            return []
+            return [], None
 
         if stream is None:
-            _, stream, stitched = self._stream_prefix(rounds)
+            commit_ms, stream, stitched = self._stream_prefix(rounds)
 
         epoch_of = np.array([t.epoch for t in stitched.transfers])
         epochs: list[EpochStats] = []
@@ -891,7 +951,24 @@ class GeoCluster:
                 view_lag_mean=lag_mean,
                 view_lag_max=lag_max,
             ))
-        return epochs
+
+        serve_stats = None
+        if cfg.serve is not None:
+            # the serving plane is a pure consumer of the measured timeline:
+            # per-node view-advance times (the same commit matrix the OCC
+            # feedback loop merges views at) + the trace RTTs for redirects.
+            # wall_ms covers the full client window even when the last
+            # commit lands inside it.
+            from ..serve.plane import simulate_serving
+
+            serve_stats = simulate_serving(
+                cfg.serve,
+                commit_ms,
+                [r.lat for r in rounds],
+                cfg.epoch_ms,
+                wall_ms=max(prev_commit, n_epochs * cfg.epoch_ms),
+            )
+        return epochs, serve_stats
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,16 @@ class ZipfianSampler:
         r = rng.choice(self.n_keys, size=size, p=self.p)
         return self.perm[r]
 
+    def top_mass(self, k: int) -> float:
+        """Probability mass of the ``k`` most popular keys.
+
+        ``self.p`` is already rank-descending, so this is the head sum —
+        the steady-state hit ratio of an ideal size-``k`` cache-aside tier
+        over this distribution (the serving plane's cache model)."""
+        if k <= 0:
+            return 0.0
+        return float(self.p[: min(k, self.n_keys)].sum())
+
 
 @dataclasses.dataclass
 class YCSBConfig:

@@ -1,0 +1,33 @@
+"""``repro.serve`` — the million-user read serving plane.
+
+The third plane of the repo (beside the device plane ``repro.dist`` and the
+WAN synchronization plane ``repro.core``): region-affine client populations
+issue follower reads against their node's possibly-stale snapshot view —
+the per-node ``DeltaCRDTStore`` views the streaming engine advances at
+measured ``node_commit_ms`` times — under staleness-bounded read semantics
+with redirect/reject policies and cache-aside accounting.  Wire it through
+``EngineConfig(streaming=True, serve=ServeConfig(...))``; the run's
+:class:`~repro.serve.stats.ServeStats` lands on ``RunStats.serve``.
+"""
+
+from .config import ServeConfig
+from .plane import (
+    redirect_policy,
+    reject_policy,
+    simulate_serving,
+    view_epochs,
+    view_staleness_ms,
+)
+from .stats import EpochServeStats, ServeStats, weighted_percentile
+
+__all__ = [
+    "ServeConfig",
+    "ServeStats",
+    "EpochServeStats",
+    "simulate_serving",
+    "view_epochs",
+    "view_staleness_ms",
+    "redirect_policy",
+    "reject_policy",
+    "weighted_percentile",
+]

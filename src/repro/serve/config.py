@@ -1,0 +1,87 @@
+"""Serving-plane configuration: region-affine client populations.
+
+Every node fronts its own client population (the region-affinity model:
+users hit the replica their region routes to, as GaussDB-Global serves
+geo-distributed reads off its asynchronous standbys).  Clients issue
+follower reads against that node's possibly-stale snapshot view — the one
+``EngineConfig(staleness_feedback=True)`` already advances at measured
+stitched commit times — under **staleness-bounded read semantics**: a view
+older than ``max_staleness_ms`` triggers the configured policy (redirect to
+the freshest reachable replica over the WAN, or reject).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = ["ServeConfig"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """One serving plane over a streaming ``GeoCluster`` run.
+
+    ``clients_per_node`` is a scalar (every node fronts the same
+    population) or a per-node sequence; with ``ops_per_client_s`` it fixes
+    the offered load, of which ``read_ratio`` is follower reads served by
+    this plane (the write fraction rides the existing OCC write path and is
+    only counted).  ``cache_keys`` > 0 models a per-node cache-aside tier:
+    the steady-state hit ratio is the top-``cache_keys`` probability mass
+    of a Zipf(``zipf_theta``) popularity over ``n_keys`` keys.
+    """
+
+    clients_per_node: float | Sequence[float] = 200_000.0
+    ops_per_client_s: float = 1.0
+    read_ratio: float = 0.95
+    max_staleness_ms: float = 100.0
+    policy: str = "redirect"        # registered "serve_policy" strategy
+    cache_keys: int = 0             # 0 = no cache tier
+    n_keys: int = 10_000
+    zipf_theta: float = 0.99
+    cache_hit_ms: float = 0.05      # in-memory cache lookup
+    local_read_ms: float = 0.5      # replica storage-engine read
+
+    def __post_init__(self):
+        # both imports are deliberately lazy: this module sits on the
+        # repro.core <-> repro.serve boundary (replication imports
+        # ServeConfig for its EngineConfig field), so a top-level core
+        # import here would turn the layering into a cycle.  Importing the
+        # plane module also guarantees the policies are registered before
+        # the fail-fast lookup below.
+        from ..core import strategies as _strategies
+        from . import plane as _plane  # noqa: F401
+
+        _strategies.get("serve_policy", self.policy)
+        if self.read_ratio < 0.0 or self.read_ratio > 1.0:
+            raise ValueError("read_ratio must be in [0, 1]")
+        if self.max_staleness_ms < 0.0:
+            raise ValueError("max_staleness_ms must be >= 0")
+        if self.ops_per_client_s <= 0.0:
+            raise ValueError("ops_per_client_s must be positive")
+        clients = np.asarray(self.clients_per_node, dtype=float)
+        if np.any(clients < 0.0):
+            raise ValueError("clients_per_node must be non-negative")
+        if self.cache_keys < 0 or self.cache_keys > self.n_keys:
+            raise ValueError("cache_keys must be in [0, n_keys]")
+
+    def clients(self, n_nodes: int) -> np.ndarray:
+        c = np.asarray(self.clients_per_node, dtype=float)
+        if c.ndim == 0:
+            return np.full(n_nodes, float(c))
+        if c.shape != (n_nodes,):
+            raise ValueError(
+                f"clients_per_node has shape {c.shape}, expected ({n_nodes},)"
+            )
+        return c.copy()
+
+    def reads_per_epoch(self, n_nodes: int, epoch_ms: float) -> np.ndarray:
+        """Expected follower reads per node per epoch window."""
+        ops = self.clients(n_nodes) * self.ops_per_client_s * (epoch_ms / 1e3)
+        return ops * self.read_ratio
+
+    def writes_per_epoch(self, n_nodes: int, epoch_ms: float) -> np.ndarray:
+        ops = self.clients(n_nodes) * self.ops_per_client_s * (epoch_ms / 1e3)
+        return ops * (1.0 - self.read_ratio)

@@ -1,0 +1,197 @@
+"""The read serving plane: staleness-bounded follower reads on stale views.
+
+The model (GaussDB-Global-style bounded-staleness standby reads, layered on
+this repo's stitched streaming simulation):
+
+* Node ``i``'s **view staleness** at serving time ``t`` is how far behind
+  the transaction arrival stream its snapshot view is:
+  ``stal_i(t) = max(0, t - v_i(t) * epoch_ms)`` where ``v_i(t)`` is the
+  number of epochs whose inbound transfers the stitched simulation has
+  delivered to ``i`` by ``t`` (``node_commit_ms`` — the *same* per-node
+  commit signal ``staleness_feedback`` advances the ``DeltaCRDTStore``
+  views on, so serving and OCC staleness are one measurement).
+* Reads of epoch ``e``'s window are evaluated at the cadence arrival time
+  ``e * epoch_ms`` (the same convention the OCC loop uses for optimistic
+  execution), which makes every (node, epoch) client bucket a deterministic
+  closed form — populations scale to millions of clients with no sampling.
+* **Policy** (registered under the ``serve_policy`` strategy kind):
+
+  - ``redirect``: a read whose local view violates ``max_staleness_ms`` is
+    sent to the *freshest* replica (minimum staleness; RTT from the
+    epoch's trace matrix breaks ties), paying the WAN round trip.  If even
+    the freshest replica is over-bound the read is additionally counted
+    ``rejected`` (the client pays a retry).  ``rejected ⊆ redirected``,
+    which is what makes both counters monotone in the bound — tightening
+    the bound can only grow the redirect set ``{stal_i > S}`` and the
+    reject set ``{min_j stal_j > S}`` (property-tested in
+    ``tests/test_property_serve.py``).
+  - ``reject``: no redirects; an over-bound read fails immediately.
+
+* **Cache-aside accounting**: each served read passes through the serving
+  node's cache tier; the steady-state hit ratio is the top-``cache_keys``
+  Zipf popularity mass (an ideal cache-aside cache converges to holding
+  the hottest keys).  Hits cost ``cache_hit_ms``, misses pay the
+  storage-engine ``local_read_ms``; redirected reads pay the RTT on top.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core import strategies as _strategies
+from ..core.workload import ZipfianSampler
+from .config import ServeConfig
+from .stats import EpochServeStats, ServeStats
+
+__all__ = ["simulate_serving", "view_epochs", "view_staleness_ms"]
+
+_EPS = 1e-9
+
+
+# ---------------------------------------------------------------------------
+# serve policies (strategy registry kind: "serve_policy")
+#
+# contract: fn(staleness_ms: (n,) float array, bound: float) ->
+#           (local, redirect, reject) boolean masks.  `reject ⊆ redirect`
+#           under policies that attempt a redirect first; `local`,
+#           `redirect` partition the nodes.
+# ---------------------------------------------------------------------------
+
+
+@_strategies.register("serve_policy", "redirect")
+def redirect_policy(staleness_ms: np.ndarray, bound: float):
+    """Over-bound reads go to the freshest replica; reject only when even
+    that replica violates the bound."""
+    local = staleness_ms <= bound + _EPS
+    redirect = ~local
+    if redirect.any() and float(staleness_ms.min()) > bound + _EPS:
+        reject = redirect.copy()
+    else:
+        reject = np.zeros_like(redirect)
+    return local, redirect, reject
+
+
+@_strategies.register("serve_policy", "reject")
+def reject_policy(staleness_ms: np.ndarray, bound: float):
+    """Strict bounded reads: an over-bound local view fails the read."""
+    local = staleness_ms <= bound + _EPS
+    return local, np.zeros_like(local), ~local
+
+
+# ---------------------------------------------------------------------------
+# view staleness from the stitched simulation's commit-time matrix
+# ---------------------------------------------------------------------------
+
+
+def view_epochs(commit_ms: np.ndarray, now_ms: float) -> np.ndarray:
+    """Per-node count of epochs whose inbound transfers have delivered by
+    ``now_ms`` — the epoch prefix each node's snapshot view has merged
+    (``GeoCluster._advance_views`` uses the identical ``<= now + eps``
+    convention, so serving sees exactly the OCC loop's views)."""
+    return (commit_ms <= now_ms + _EPS).sum(axis=0)
+
+
+def view_staleness_ms(
+    commit_ms: np.ndarray, now_ms: float, epoch_ms: float
+) -> np.ndarray:
+    """Per-node view staleness: the age of the oldest transaction-arrival
+    epoch the node has *not* merged yet (0 when fully caught up)."""
+    v = view_epochs(commit_ms, now_ms)
+    return np.maximum(now_ms - v * epoch_ms, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# the serving simulation
+# ---------------------------------------------------------------------------
+
+
+def simulate_serving(
+    cfg: ServeConfig,
+    commit_ms: np.ndarray,
+    lats: list[np.ndarray] | tuple[np.ndarray, ...],
+    epoch_ms: float,
+    wall_ms: float,
+) -> ServeStats:
+    """Serve every epoch's client read load against the measured views.
+
+    ``commit_ms`` is the ``(n_epochs, n_nodes)`` per-node commit-time
+    matrix of the stitched streaming run (``node_commit_ms``); ``lats`` the
+    per-epoch trace latency matrices (redirect RTTs); ``wall_ms`` the
+    run's measured wall-clock (throughput denominator).
+    """
+    commit_ms = np.asarray(commit_ms, dtype=float)
+    n_epochs, n = commit_ms.shape
+    policy = _strategies.get("serve_policy", cfg.policy)
+    reads = cfg.reads_per_epoch(n, epoch_ms)
+    writes = cfg.writes_per_epoch(n, epoch_ms)
+    if cfg.cache_keys > 0:
+        sampler = ZipfianSampler(
+            cfg.n_keys, cfg.zipf_theta, np.random.default_rng(0)
+        )
+        hit = sampler.top_mass(cfg.cache_keys)
+    else:
+        hit = 0.0
+    bound = float(cfg.max_staleness_ms)
+
+    epochs: list[EpochServeStats] = []
+    lat_values: list[float] = []
+    lat_weights: list[float] = []
+
+    def emit(value_ms: float, weight: float):
+        if weight > 0.0:
+            lat_values.append(float(value_ms))
+            lat_weights.append(float(weight))
+
+    for e in range(n_epochs):
+        now = e * epoch_ms
+        stal = view_staleness_ms(commit_ms, now, epoch_ms)
+        local, redirect, reject = policy(stal, bound)
+        served_redirect = redirect & ~reject
+
+        lat_e = np.asarray(lats[min(e, len(lats) - 1)], dtype=float)
+        rtt = lat_e + lat_e.T
+        # freshest replica per source: minimum staleness, nearest RTT tie-break
+        fresh = stal <= float(stal.min()) + _EPS
+        cand = np.where(fresh[None, :], rtt, np.inf)
+        target = cand.argmin(axis=1)
+
+        local_reads = float(reads[local].sum())
+        stale_local = float(reads[local & (stal > _EPS)].sum())
+        redirected = float(reads[redirect].sum())
+        rejected = float(reads[reject].sum())
+
+        # latency classes: the cache tier fronts every *served* read at its
+        # serving node (local or redirect target), hits and misses split
+        # each bucket by the modeled steady-state hit ratio
+        emit(cfg.cache_hit_ms, local_reads * hit)
+        emit(cfg.local_read_ms, local_reads * (1.0 - hit))
+        served_remote = 0.0
+        for i in np.flatnonzero(served_redirect):
+            r = float(rtt[i, target[i]])
+            emit(r + cfg.cache_hit_ms, reads[i] * hit)
+            emit(r + cfg.local_read_ms, reads[i] * (1.0 - hit))
+            served_remote += float(reads[i])
+
+        served = local_reads + served_remote
+        epochs.append(EpochServeStats(
+            epoch=e,
+            reads=float(reads.sum()),
+            writes=float(writes.sum()),
+            served_local=local_reads,
+            stale_served=stale_local,
+            redirected=redirected,
+            rejected=rejected,
+            cache_hits=served * hit,
+            cache_misses=served * (1.0 - hit),
+            view_staleness_ms_mean=float(stal.mean()) if n else 0.0,
+            view_staleness_ms_max=float(stal.max()) if n else 0.0,
+        ))
+
+    return ServeStats(
+        epochs=epochs,
+        latency_values_ms=np.asarray(lat_values, dtype=float),
+        latency_weights=np.asarray(lat_weights, dtype=float),
+        wall_ms=float(wall_ms),
+        max_staleness_ms=bound,
+        policy=cfg.policy,
+    )

@@ -1,0 +1,79 @@
+"""Hypothesis property tests for the serving plane's bound monotonicity.
+
+The benchmark gates in ``benchmarks/bench_serving.py`` rely on these being
+theorems of the model, not empirical luck: for ANY commit-time matrix,
+cadence and pair of bounds ``S1 <= S2``,
+
+* tightening the bound (S2 -> S1) never *increases* the stale-serve count
+  (a read served stale under a tight bound is served stale under any
+  looser one),
+* tightening never *decreases* the redirect or reject counts (the redirect
+  set is ``{stal_i > S}`` and the reject set ``{min_j stal_j > S}`` — both
+  shrink as S grows),
+* served reads are monotone non-decreasing in the bound, and every read is
+  either served or rejected (conservation).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency; see requirements-dev.txt")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.serve import ServeConfig, simulate_serving
+
+
+@st.composite
+def serving_instance(draw):
+    """A random (commit matrix, latency matrix, cadence, bound pair)."""
+    n = draw(st.integers(2, 5))
+    n_epochs = draw(st.integers(1, 6))
+    epoch_ms = draw(st.floats(1.0, 50.0))
+    # per-(epoch, node) delivery delays; cumulative over epochs so each
+    # node's commit column is monotone, as node_commit_ms guarantees
+    gaps = np.array([
+        [draw(st.floats(0.0, 120.0)) for _ in range(n)]
+        for _ in range(n_epochs)
+    ])
+    commit = np.cumsum(gaps + 0.1, axis=0)
+    lat = np.array([
+        [0.0 if i == j else draw(st.floats(1.0, 100.0)) for j in range(n)]
+        for i in range(n)
+    ])
+    lat = (lat + lat.T) / 2.0
+    b1 = draw(st.floats(0.0, 300.0))
+    b2 = draw(st.floats(0.0, 300.0))
+    policy = draw(st.sampled_from(["redirect", "reject"]))
+    return commit, lat, epoch_ms, min(b1, b2), max(b1, b2), policy
+
+
+@given(serving_instance())
+@settings(max_examples=60, deadline=None)
+def test_tightening_bound_is_monotone(inst):
+    commit, lat, epoch_ms, s1, s2, policy = inst
+    runs = {}
+    for bound in (s1, s2):
+        cfg = ServeConfig(clients_per_node=1e6, max_staleness_ms=bound,
+                          policy=policy)
+        runs[bound] = simulate_serving(
+            cfg, commit, [lat] * commit.shape[0], epoch_ms,
+            wall_ms=float(commit.max()),
+        )
+    tight, loose = runs[s1], runs[s2]
+    # tightening never increases stale serves...
+    assert tight.stale_served <= loose.stale_served + 1e-6
+    # ...and never decreases redirects or rejects
+    assert tight.redirected >= loose.redirected - 1e-6
+    assert tight.rejected >= loose.rejected - 1e-6
+    # served reads are monotone non-decreasing in the bound
+    assert tight.served_reads <= loose.served_reads + 1e-6
+    # conservation + reject ⊆ redirect, per epoch
+    for r in runs.values():
+        for e in r.epochs:
+            assert e.served + e.rejected == pytest.approx(e.reads)
+            if policy == "redirect":
+                assert e.rejected <= e.redirected + 1e-9
+            else:
+                assert e.redirected == 0.0

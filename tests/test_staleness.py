@@ -80,6 +80,11 @@ def test_default_off_digests_identical_across_engines():
     assert ba.state_digest == ev.state_digest == st.state_digest
     assert ba.value_digest == ev.value_digest == st.value_digest
     assert ba.committed == ev.committed == st.committed
+    # filtering runs against the same (global) snapshot with feedback off,
+    # so the wire-byte accounting is identical too — pins the
+    # aggregator-own-view change to the staleness_feedback=True path only
+    # (the barrier engine's phase-sum accounting differs by construction)
+    assert ev.wan_bytes == st.wan_bytes
     for rs in (ba, ev, st):
         assert rs.read_aborts == 0
         assert rs.ww_aborts == rs.aborted
@@ -208,3 +213,79 @@ def test_generator_seq_is_node_local_monotone(make):
                 seen.add(key)
                 assert t.seq > last.get(node, -1)
                 last[node] = t.seq
+
+
+# ---------------------------------------------------------------------------
+# aggregator-side filtering under stale views
+# ---------------------------------------------------------------------------
+
+
+def test_aggregator_filters_against_own_view():
+    """Under staleness_feedback each group's aggregator filters against
+    *its own* (possibly stale) snapshot view — not the globally-merged
+    store.  A spy filter records which snapshot it was handed: aggregator
+    node ids under feedback, the global store (node_id -1) otherwise."""
+    from repro.core import strategies as _strategies
+    from repro.core.whitedata import filter_group_batch
+
+    seen: list[int] = []
+
+    def spy(txns, snapshot):
+        seen.append(snapshot.node_id)
+        return filter_group_batch(txns, snapshot)
+
+    _strategies.register("filter", "spy-staleness-test", spy)
+    _, regions, trace, wan = _setup()
+    bwm = np.where(wan, 20.0, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    for feedback in (False, True):
+        seen.clear()
+        cfg = EngineConfig(n_nodes=5, streaming=True,
+                           staleness_feedback=feedback, grouping=True,
+                           filtering=True, tiv=True, planner="kcenter",
+                           epoch_ms=2.0, filter_name="spy-staleness-test")
+        eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=7)
+        gen = TPCCGenerator(
+            TPCCConfig(n_warehouses=20, mix="TPCC-A", remote_prob=0.25,
+                       items_per_warehouse=20),
+            5, seed=3,
+        )
+        eng.run(gen, trace, txns_per_node=10, n_epochs=8)
+        assert seen
+        if feedback:
+            assert all(0 <= nid < 5 for nid in seen)
+        else:
+            assert all(nid == -1 for nid in seen)
+
+
+def test_stale_aggregator_view_filters_fewer_updates():
+    """Soundness of aggregator-own-view filtering: a stale view holds
+    *smaller* versions, so the stale and null-effect rules can only fire
+    less — the filter under-detects white data, it never drops a black
+    update (a version stale against an older snapshot is stale against any
+    newer one)."""
+    from repro.core.occ import Txn
+    from repro.core.whitedata import filter_group_batch
+
+    fresh = DeltaCRDTStore(0)
+    fresh.apply(Update("a", b"x", Version(2, 5, 0)))
+    fresh.apply(Update("b", b"y", Version(2, 6, 0)))
+    stale = DeltaCRDTStore(1)  # this aggregator hasn't merged epoch 2 yet
+
+    txns = [
+        # superseded by fresh's (2,5,0) -> stale rule fires on fresh only
+        Txn(txn_id=0, node=1, epoch=1, seq=9, read_set=(),
+            write_set=(("a", b"old"),)),
+        # re-writes fresh's current value -> null rule fires on fresh only
+        Txn(txn_id=1, node=1, epoch=3, seq=1, read_set=(),
+            write_set=(("b", b"y"),)),
+    ]
+    fr_fresh = filter_group_batch(txns, fresh)
+    fr_stale = filter_group_batch(txns, stale)
+    assert fr_fresh.stats.stale_updates == 1
+    assert fr_fresh.stats.null_updates == 1
+    assert fr_stale.stats.stale_updates == 0
+    assert fr_stale.stats.null_updates == 0
+    # under-detection only: the stale aggregator keeps (and pays for) more
+    assert fr_stale.stats.kept_bytes > fr_fresh.stats.kept_bytes
+    assert fr_stale.stats.kept_updates >= fr_fresh.stats.kept_updates
