@@ -52,7 +52,8 @@ def run(quick: bool = True) -> dict:
     for ems in grid:
         rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
                           streaming=True, staleness_feedback=True,
-                          epoch_ms=ems, planner=PLANNER, modeled_cpu=True)
+                          epoch_ms=ems, planner=PLANNER, modeled_cpu=True,
+                          verify_schedules=True)
         curve.append(rs.read_abort_rate)
         ww.append(rs.ww_aborts)
     native_rate = curve[grid.index(10.0)]
@@ -67,16 +68,17 @@ def run(quick: bool = True) -> dict:
         rs, _ = _run_tpcc("TPCC-A", True, tr, regions, epochs=epochs,
                           streaming=True, staleness_feedback=True,
                           epoch_ms=BOUNDARY_EPOCH_MS, planner=PLANNER,
-                          modeled_cpu=True)
+                          modeled_cpu=True, verify_schedules=True)
         rates[name] = rs.read_abort_rate
 
     # default-off regression gate: streaming digests byte-identical to the
     # formula engine, and the read rule stays vacuous
     formula_rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
-                              planner=PLANNER, modeled_cpu=True)
+                              planner=PLANNER, modeled_cpu=True,
+                              verify_schedules=True)
     stream_rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
                              streaming=True, planner=PLANNER,
-                             modeled_cpu=True)
+                             modeled_cpu=True, verify_schedules=True)
     default_off = {
         "state_consistent": formula_rs.state_digest == stream_rs.state_digest,
         "value_consistent": formula_rs.value_digest == stream_rs.value_digest,

@@ -96,7 +96,7 @@ def _stream_wall_s(base: np.ndarray, streaming: bool) -> float:
     cfg = EngineConfig(
         n_nodes=n, streaming=streaming, grouping=True, filtering=True,
         tiv=True, planner="kcenter", epoch_ms=STREAM_EPOCH_MS,
-        txn_exec_us=STREAM_TXN_EXEC_US,
+        txn_exec_us=STREAM_TXN_EXEC_US, verify_schedules=True,
     )
     eng = GeoCluster(cfg, bandwidth_mbps=STREAM_BW_MBPS, seed=7)
     gen = YCSBGenerator(
@@ -121,7 +121,9 @@ def run(quick: bool = True) -> dict:
         plan = kcenter_grouping(base, max(2, int(round(optimal_k(base.shape[0])))))
         acc = {s: {"event": [], "barrier": []} for s in ("flat", "hier", "geococo")}
         for lat in trace:
-            sim = WANSimulator(lat, BW_MBPS)
+            # verify=True: every builder DAG passes the static invariant
+            # checker (repro.analysis.schedule_check) before simulation
+            sim = WANSimulator(lat, BW_MBPS, verify=True)
             for strat, sched in _schedules(lat, plan).items():
                 ev = sim.run(sched).makespan_ms
                 ba = sim.run(sched, barrier=True).makespan_ms

@@ -26,7 +26,8 @@ from .common import check, paper_testbed
 def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
               streaming: bool = False, staleness_feedback: bool = False,
               epoch_ms: float = 10.0, planner: str = "milp",
-              modeled_cpu: bool = False, serve=None, txns_per_node: int = 40):
+              modeled_cpu: bool = False, serve=None, txns_per_node: int = 40,
+              verify_schedules: bool = False):
     """Paper regime: Alibaba-cloud 5-node testbed, WAN bandwidth in the
     Fig. 3 constrained band (~15 Mbps to HK), 100 warehouses with hot item
     contention "to stress inter-node coordination" (Sec 6.3)."""
@@ -40,6 +41,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
         planner=planner, epoch_ms=epoch_ms, streaming=streaming,
         staleness_feedback=staleness_feedback,
         modeled_cpu=modeled_cpu, serve=serve,
+        verify_schedules=verify_schedules,
     )
     wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     eng = GeoCluster(

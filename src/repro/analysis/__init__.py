@@ -1,0 +1,54 @@
+"""Static verification layer: invariants checked for *all* inputs, not
+sampled ones.
+
+The repo's soundness story rests on theorems — ``event <= barrier`` under
+bandwidth admission, byte-identical digests with the feedback features off,
+monotone serving bounds — whose *preconditions* are structural properties of
+builder outputs and config combinations.  The dynamic suite samples those
+spaces; this package checks them exhaustively, before a single flow is
+simulated:
+
+* :mod:`repro.analysis.schedule_check` — :func:`verify_schedule`, a pure
+  O(V + E) validator over any transfer DAG (acyclicity, dep bounds, phase
+  monotonicity along dep edges — the admission theorem's precondition —
+  epoch contiguity, clock-chain linearity, payload sanity, node bounds).
+  Wired behind ``EngineConfig(verify_schedules=True)`` /
+  ``WANSimulator(verify=True)``.
+* :mod:`repro.analysis.config_check` — :func:`check_config`, one declarative
+  rule table for every config-flag constraint (streaming-only features,
+  mutually exclusive engines, schedule/builder contracts), replacing the
+  scattered ``raise ValueError`` sites.
+* :mod:`repro.analysis.lint` — repo-specific AST determinism lint
+  (wall-clock outside measured branches, module-global RNG, unordered set
+  iteration in digest paths, mutable defaults, bare float ``==`` on
+  simulated times, tracked bytecode).  CLI:
+  ``python -m repro.analysis.lint src/ benchmarks/``.
+
+Everything here is stdlib-only at import time (numpy/registry imports are
+deferred into the rules that need them), so the lint CLI and the CI gate
+run without the simulation stack installed.
+"""
+
+from .config_check import ConfigRule, check_config, validate_config
+from .lint import lint_file, lint_paths
+from .schedule_check import (
+    ScheduleVerificationError,
+    reset_verified_schedule_count,
+    verified_schedule_count,
+    verify_schedule,
+)
+from .violations import Violation, format_violations
+
+__all__ = [
+    "Violation",
+    "format_violations",
+    "verify_schedule",
+    "ScheduleVerificationError",
+    "verified_schedule_count",
+    "reset_verified_schedule_count",
+    "ConfigRule",
+    "check_config",
+    "validate_config",
+    "lint_file",
+    "lint_paths",
+]

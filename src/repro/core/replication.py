@@ -84,6 +84,7 @@ from .whitedata import FilterResult, FilterStats, filter_group_batch
 # the serving plane lives above this engine (it consumes measured commit
 # times, never feeds back into them); importing its config here keeps
 # EngineConfig the single wiring surface, like staleness_feedback
+from ..analysis.config_check import validate_config
 from ..serve.config import ServeConfig
 from ..serve.stats import ServeStats
 
@@ -134,6 +135,12 @@ class EngineConfig:
     modeled_cpu: bool = False
     filter_cpu_ns_per_byte: float = 2.0
     compress_cpu_ns_per_byte: float = 15.0
+    # debug hook: statically verify every schedule the engine simulates
+    # (repro.analysis.schedule_check.verify_schedule — acyclicity, phase
+    # monotonicity along deps, clock-chain linearity, payload/node sanity)
+    # before it runs.  O(V+E) per round; raises ScheduleVerificationError
+    # on the first unsound DAG instead of silently mistiming it.
+    verify_schedules: bool = False
     sync_strategy: str | None = None   # named wan_sync preset (overrides booleans)
     grouping: bool = True              # GeoCoCo hierarchical transmission
     filtering: bool = True             # white-data filter at aggregators
@@ -154,25 +161,10 @@ class EngineConfig:
         # booleans of a boolean-configured instance behaves as expected
         # (with sync_strategy set, the name wins on replace — by design;
         # ablate via the booleans or pass sync_strategy=None).
-        if self.streaming and self.barrier:
-            raise ValueError(
-                "streaming=True requires the event engine: cross-epoch "
-                "stitched DAGs have no barrier-phase semantics (set "
-                "barrier=False, or drop streaming for the legacy "
-                "max(epoch, exec, sync) formula)"
-            )
-        if self.staleness_feedback and not self.streaming:
-            raise ValueError(
-                "staleness_feedback=True requires streaming=True: per-node "
-                "view staleness is measured from the stitched multi-epoch "
-                "simulation's per-node commit times"
-            )
-        if self.serve is not None and not self.streaming:
-            raise ValueError(
-                "serve=ServeConfig(...) requires streaming=True: the serving "
-                "plane reads per-node view staleness off the stitched "
-                "multi-epoch simulation's measured commit times"
-            )
+        # flag-compatibility constraints live in the declarative rule table
+        # (repro.analysis.config_check) — one place for every flag, same
+        # historical error messages
+        validate_config(self)
         if self.sync_strategy is not None:
             spec = _strategies.get("wan_sync", self.sync_strategy)
             self.grouping = spec.grouping
@@ -424,31 +416,19 @@ class GeoCluster:
         self._schedule_fn = _strategies.get("schedule", cfg.resolved_schedule_name)
         self._flat_schedule_fn = _strategies.get("schedule", "all_to_all")
         self._filter_fn = _strategies.get("filter", cfg.resolved_filter_name)
+        # registry-dependent contract rules (grouping-engine builder
+        # signature, flat engine runs all_to_all by definition) — fail
+        # fast at attach, not mid-run; the rules themselves live in the
+        # declarative config_check table
+        validate_config(cfg, stage="cluster")
         self._schedule_takes_compute = False
         if cfg.grouping:
-            # fail fast, not mid-run: the grouping engine drives builders
-            # with hierarchical_schedule's contract (plan, node payloads,
-            # group_payload_bytes, lat/tiv kwargs)
+            # pipelined engine: builders that accept group_compute_ms get the
+            # per-group filter/compress CPU charged on their exchange edges
             import inspect
 
             params = inspect.signature(self._schedule_fn).parameters
-            if "group_payload_bytes" not in params:
-                raise ValueError(
-                    f"schedule {cfg.resolved_schedule_name!r} cannot drive the "
-                    "grouping engine: it does not follow the hierarchical "
-                    "builder contract (missing 'group_payload_bytes')"
-                )
-            # pipelined engine: builders that accept group_compute_ms get the
-            # per-group filter/compress CPU charged on their exchange edges
             self._schedule_takes_compute = "group_compute_ms" in params
-        elif cfg.schedule_name not in (None, "all_to_all"):
-            # the non-grouping engine runs the flat all-to-all round by
-            # definition; a differently-named builder would be silently
-            # ignored and the run mislabeled
-            raise ValueError(
-                f"schedule {cfg.schedule_name!r} requires grouping=True "
-                "(the flat engine always runs 'all_to_all')"
-            )
         self.plan_time_s = 0.0
         self._payload_ewma = 0.0   # observed per-node epoch payload (bytes)
         self._keep_ewma = 1.0      # observed post-filter keep ratio
@@ -789,7 +769,7 @@ class GeoCluster:
         cfg = self.cfg
         rnd = self._prepare_epoch(epoch, txns_by_node, lat)
         sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng,
-                           barrier=cfg.barrier)
+                           barrier=cfg.barrier, verify=cfg.verify_schedules)
         res = sim.run(rnd.schedule)
         self.msg_matrix += res.msg_matrix
         return self._epoch_stats(rnd, sim, res)
@@ -837,7 +817,8 @@ class GeoCluster:
             n=cfg.n_nodes,
         )
         stream_sim = WANSimulator(rounds[0].lat, self.bandwidth,
-                                  loss=self.loss, rng=self.rng)
+                                  loss=self.loss, rng=self.rng,
+                                  verify=cfg.verify_schedules)
         stream = stream_sim.run(stitched, lats=[r.lat for r in rounds])
         commits = node_commit_ms(stitched, stream, cfg.n_nodes, len(rounds))
         return commits, stream, stitched
@@ -918,7 +899,7 @@ class GeoCluster:
             txns = generator.epoch_txns(e, txns_per_node, snapshot=snapshot)
             rnd = self._prepare_epoch(e, txns, lat, views=views)
             sim = WANSimulator(lat, self.bandwidth, loss=self.loss,
-                               rng=self.rng)
+                               rng=self.rng, verify=cfg.verify_schedules)
             res = sim.run(rnd.schedule)
             self.msg_matrix += res.msg_matrix
             rounds.append(rnd)

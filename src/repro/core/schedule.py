@@ -143,6 +143,18 @@ class TransmissionSchedule:
 
     # -- DAG accessors -------------------------------------------------------
 
+    def verify(self, *, n_nodes: int | None = None):
+        """Statically verify this DAG's engine invariants (acyclicity, dep
+        bounds, phase monotonicity along dep edges, epoch contiguity,
+        clock-chain linearity, payload/node sanity).  Returns the list of
+        :class:`~repro.analysis.violations.Violation` — empty when sound.
+        The constructor enforces only the topological-order subset; this is
+        the full check the ``EngineConfig(verify_schedules=True)`` debug
+        hook runs on every simulated schedule."""
+        from ..analysis.schedule_check import verify_schedule
+
+        return verify_schedule(self, n_nodes=n_nodes)
+
     @property
     def n_transfers(self) -> int:
         return len(self.transfers)

@@ -51,21 +51,14 @@ class ServeConfig:
         # import here would turn the layering into a cycle.  Importing the
         # plane module also guarantees the policies are registered before
         # the fail-fast lookup below.
+        from ..analysis.config_check import validate_config
         from ..core import strategies as _strategies
         from . import plane as _plane  # noqa: F401
 
         _strategies.get("serve_policy", self.policy)
-        if self.read_ratio < 0.0 or self.read_ratio > 1.0:
-            raise ValueError("read_ratio must be in [0, 1]")
-        if self.max_staleness_ms < 0.0:
-            raise ValueError("max_staleness_ms must be >= 0")
-        if self.ops_per_client_s <= 0.0:
-            raise ValueError("ops_per_client_s must be positive")
-        clients = np.asarray(self.clients_per_node, dtype=float)
-        if np.any(clients < 0.0):
-            raise ValueError("clients_per_node must be non-negative")
-        if self.cache_keys < 0 or self.cache_keys > self.n_keys:
-            raise ValueError("cache_keys must be in [0, n_keys]")
+        # range/shape constraints live in the declarative rule table
+        # (repro.analysis.config_check) — same historical error messages
+        validate_config(self)
 
     def clients(self, n_nodes: int) -> np.ndarray:
         c = np.asarray(self.clients_per_node, dtype=float)

@@ -1,0 +1,21 @@
+"""Fixture: zero violations — the sanctioned idioms for each rule, plus an
+inline pragma suppressing an otherwise-tripping line."""
+
+import time
+
+import numpy as np
+
+
+def plan_cost_s():
+    return time.perf_counter()  # lint: allow[wallclock] measured plan cost
+
+
+def digest(keys, rng=None):
+    rng = rng or np.random.default_rng(0)
+    order = sorted(set(keys))
+    jitter_ms = float(rng.random())
+    return order, jitter_ms
+
+
+def close_enough(a_ms, b_ms, tol=1e-9):
+    return abs(a_ms - b_ms) <= tol

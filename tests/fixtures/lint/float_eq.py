@@ -1,0 +1,10 @@
+"""Fixture: trips ``float-time-eq`` exactly once (exact-zero checks and
+non-time comparisons are allowed)."""
+
+
+def same_commit(a_ms, b_ms, count):
+    if a_ms == 0.0:        # exact-zero: allowed
+        return True
+    if count == 3:         # not a time: allowed
+        return False
+    return a_ms == b_ms

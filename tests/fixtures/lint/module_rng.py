@@ -1,0 +1,10 @@
+"""Fixture: trips the ``module-rng`` rule exactly once (the constructor
+call below is allowed; the module-global draw is not)."""
+
+import numpy as np
+
+rng = np.random.default_rng(0)  # allowed: seeded Generator constructor
+
+
+def draw():
+    return np.random.rand(3)

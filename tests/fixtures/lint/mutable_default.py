@@ -1,0 +1,12 @@
+"""Fixture: trips ``mutable-default`` exactly once."""
+
+
+def accumulate(x, acc=[]):
+    acc.append(x)
+    return acc
+
+
+def fine(x, acc=None):
+    acc = [] if acc is None else acc
+    acc.append(x)
+    return acc

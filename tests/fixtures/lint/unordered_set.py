@@ -1,0 +1,16 @@
+"""Fixture: trips ``unordered-set-iter`` exactly once — set iteration in a
+determinism-critical function (the sorted one below is fine, as is set
+iteration outside critical functions)."""
+
+
+def digest(keys):
+    acc = []
+    for k in set(keys):
+        acc.append(k)
+    for k in sorted(set(keys)):  # ordered: allowed
+        acc.append(k)
+    return acc
+
+
+def helper(keys):
+    return [k for k in set(keys)]  # non-critical function: allowed

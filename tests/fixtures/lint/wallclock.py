@@ -1,0 +1,7 @@
+"""Fixture: trips the ``wallclock`` rule exactly once."""
+
+import time
+
+
+def simulated_epoch_ms():
+    return time.perf_counter() * 1e3

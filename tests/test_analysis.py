@@ -1,0 +1,407 @@
+"""Static-analysis passes: schedule verifier sweep + seeded mutations,
+config-compatibility rule table, determinism lint (fixtures + clean repo).
+
+The verifier sweep is the static counterpart of the makespan gate: every
+builder x every benchmark topology x the stitched streaming schedules must
+satisfy every engine invariant — and each seeded mutation below must be
+*caught*, so a refactor can neither break a builder silently nor lobotomize
+the verifier silently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    ScheduleVerificationError,
+    check_config,
+    lint_file,
+    lint_paths,
+    reset_verified_schedule_count,
+    validate_config,
+    verified_schedule_count,
+    verify_schedule,
+)
+from repro.core import (
+    EngineConfig,
+    GeoCluster,
+    GeoClusterSpec,
+    Transfer,
+    TransmissionSchedule,
+    WANSimulator,
+    YCSBConfig,
+    YCSBGenerator,
+    all_to_all_schedule,
+    aws_latency_matrix,
+    geo_clustered_matrix,
+    hierarchical_schedule,
+    jitter_trace,
+    leader_schedule,
+    stitch_schedules,
+)
+from repro.core.planner import kcenter_grouping, optimal_k
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+PAYLOAD = 250_000.0
+
+
+def _topologies() -> dict[str, np.ndarray]:
+    """The three benchmark topologies (mirrors bench_makespan_regression)."""
+    lat_w, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=20, n_clusters=6, congestion_frac=0.22,
+                       congestion_mult=(1.4, 2.5)),
+        np.random.default_rng(1),
+    )
+    lat_a, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=12, n_clusters=3, congestion_frac=0.3,
+                       congestion_mult=(1.3, 2.5)),
+        np.random.default_rng(3),
+    )
+    return {"aws": aws_latency_matrix(), "wondernet_like": lat_w,
+            "alibaba_like": lat_a}
+
+
+TOPOLOGIES = _topologies()
+
+
+def _schedules(lat: np.ndarray) -> dict[str, TransmissionSchedule]:
+    """Every builder variant on one topology."""
+    n = lat.shape[0]
+    plan = kcenter_grouping(lat, max(2, int(round(optimal_k(n)))))
+    gp = np.array([len(g) * PAYLOAD * 0.4 for g in plan.groups])
+    return {
+        "flat": all_to_all_schedule(n, PAYLOAD),
+        "hier": hierarchical_schedule(plan, PAYLOAD),
+        "geococo": hierarchical_schedule(
+            plan, PAYLOAD, group_payload_bytes=gp, lat=lat, tiv=True
+        ),
+        "leader": leader_schedule(n, 0, PAYLOAD),
+        "leader_planned": leader_schedule(n, 0, PAYLOAD, plan),
+    }
+
+
+def _stitched(lat: np.ndarray, n_epochs: int = 8) -> TransmissionSchedule:
+    """An 8-epoch streaming stitch of geococo rounds with per-node exec
+    stages and a cadence clock — what EngineConfig(streaming=True) runs."""
+    n = lat.shape[0]
+    rng = np.random.default_rng(11)
+    trace = jitter_trace(lat, n_epochs, rng)
+    rounds = [_schedules(ep)["geococo"] for ep in trace]
+    exec_ms = rng.uniform(0.05, 0.6, size=(n_epochs, n))
+    return stitch_schedules(
+        rounds, node_exec_ms=exec_ms.tolist(), epoch_ms=2.0, n=n
+    )
+
+
+# ---------------------------------------------------------------------------
+# Schedule verifier: exhaustive zero-violation sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_all_builders_verify_clean(topo):
+    lat = TOPOLOGIES[topo]
+    n = lat.shape[0]
+    for name, sched in _schedules(lat).items():
+        violations = verify_schedule(sched, n_nodes=n)
+        assert violations == [], f"{topo}/{name}: {violations}"
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_stitched_streaming_verifies_clean(topo):
+    lat = TOPOLOGIES[topo]
+    sched = _stitched(lat)
+    assert sched.verify(n_nodes=lat.shape[0]) == []
+    # the stitch really is multi-epoch with a clock chain
+    assert max(t.epoch for t in sched.transfers) == 7
+    assert sum(t.tag == "clock" for t in sched.transfers) == 7
+
+
+def test_legacy_phase_form_verifies_clean():
+    # the legacy list-of-phases constructor installs barrier edges
+    sched = TransmissionSchedule([
+        [Transfer(0, 1, 10.0), Transfer(1, 2, 10.0)],
+        [Transfer(2, 0, 10.0)],
+    ])
+    assert verify_schedule(sched, n_nodes=3) == []
+
+
+def test_verified_counter_counts_only_clean_schedules():
+    reset_verified_schedule_count()
+    sched = all_to_all_schedule(4, PAYLOAD)
+    assert verify_schedule(sched, n_nodes=4) == []
+    assert verified_schedule_count() == 1
+    bad = all_to_all_schedule(4, PAYLOAD)
+    bad.transfers[0] = dataclasses.replace(bad.transfers[0], nbytes=-1.0)
+    assert verify_schedule(bad, n_nodes=4) != []
+    assert verified_schedule_count() == 1
+
+
+# ---------------------------------------------------------------------------
+# Schedule verifier: seeded mutations must be caught
+# ---------------------------------------------------------------------------
+# TransmissionSchedule's constructor enforces only topological order, and
+# these mutations bypass even that by editing the transfers list in place —
+# exactly the hand-built / refactor-bug schedules the static pass exists for.
+
+
+def _rules(violations) -> set[str]:
+    return {v.rule for v in violations}
+
+
+def test_mutation_cycle_caught():
+    sched = _stitched(TOPOLOGIES["alibaba_like"], n_epochs=3)
+    i, j = 10, 20
+    sched.transfers[i] = dataclasses.replace(sched.transfers[i], deps=(j,))
+    sched.transfers[j] = dataclasses.replace(sched.transfers[j], deps=(i,))
+    assert "cycle" in _rules(verify_schedule(sched))
+
+
+def test_mutation_dangling_dep_caught():
+    sched = _schedules(TOPOLOGIES["aws"])["geococo"]
+    m = len(sched.transfers)
+    sched.transfers[5] = dataclasses.replace(
+        sched.transfers[5], deps=(m + 7,)
+    )
+    assert "dep-bounds" in _rules(verify_schedule(sched))
+
+
+def test_mutation_nonmonotone_phase_caught():
+    sched = _schedules(TOPOLOGIES["aws"])["hier"]
+    # find a transfer with a dependency and collapse the phase gap
+    i = next(i for i, t in enumerate(sched.transfers) if t.deps)
+    d = sched.transfers[i].deps[0]
+    phase_of = list(sched.phase_of)
+    phase_of[d] = phase_of[i]
+    sched.phase_of = tuple(phase_of)
+    assert "phase-monotone" in _rules(verify_schedule(sched))
+
+
+def test_mutation_negative_payload_caught():
+    sched = _schedules(TOPOLOGIES["aws"])["flat"]
+    sched.transfers[3] = dataclasses.replace(
+        sched.transfers[3], nbytes=-250_000.0
+    )
+    assert "negative-payload" in _rules(verify_schedule(sched))
+
+
+def test_mutation_broken_clock_chain_caught():
+    sched = _stitched(TOPOLOGIES["alibaba_like"], n_epochs=4)
+    clocks = [i for i, t in enumerate(sched.transfers) if t.tag == "clock"]
+    assert len(clocks) == 3
+    # unhook the second clock from the first: the cadence chain is no
+    # longer linear
+    c = clocks[1]
+    sched.transfers[c] = dataclasses.replace(sched.transfers[c], deps=())
+    assert "clock-chain" in _rules(verify_schedule(sched))
+
+
+def test_mutation_node_out_of_bounds_caught():
+    sched = all_to_all_schedule(6, PAYLOAD)
+    assert "node-bounds" in _rules(verify_schedule(sched, n_nodes=4))
+
+
+def test_mutation_payload_on_local_stage_caught():
+    sched = _stitched(TOPOLOGIES["alibaba_like"], n_epochs=2)
+    i = next(i for i, t in enumerate(sched.transfers) if t.tag == "exec")
+    sched.transfers[i] = dataclasses.replace(sched.transfers[i], nbytes=64.0)
+    assert "local-stage" in _rules(verify_schedule(sched))
+
+
+def test_mutation_epoch_gap_caught():
+    sched = _stitched(TOPOLOGIES["alibaba_like"], n_epochs=3)
+    i = len(sched.transfers) - 1
+    sched.transfers[i] = dataclasses.replace(sched.transfers[i], epoch=5)
+    assert "epoch-contiguity" in _rules(verify_schedule(sched))
+
+
+def test_mutation_dep_on_later_epoch_caught():
+    sched = _stitched(TOPOLOGIES["alibaba_like"], n_epochs=3)
+    # retag an early transfer's dep target into the future
+    i = next(i for i, t in enumerate(sched.transfers)
+             if t.deps and t.epoch == 1)
+    d = sched.transfers[i].deps[0]
+    sched.transfers[d] = dataclasses.replace(sched.transfers[d], epoch=2)
+    vs = verify_schedule(sched)
+    assert "epoch-monotone" in _rules(vs)
+
+
+# ---------------------------------------------------------------------------
+# Engine wiring: verify_schedules=True
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_verify_rejects_corrupt_schedule():
+    lat = aws_latency_matrix()
+    sched = all_to_all_schedule(lat.shape[0], PAYLOAD)
+    sched.transfers[0] = dataclasses.replace(
+        sched.transfers[0], nbytes=-1.0
+    )
+    sim = WANSimulator(lat, 500.0, verify=True)
+    with pytest.raises(ScheduleVerificationError, match="negative-payload"):
+        sim.run(sched)
+    # ScheduleVerificationError is a ValueError: existing callers that
+    # catch config errors keep working
+    assert issubclass(ScheduleVerificationError, ValueError)
+    # verification off by default: the same corrupt schedule still runs
+    WANSimulator(lat, 500.0).run(sched)
+
+
+def test_streaming_engine_runs_with_verification():
+    lat = TOPOLOGIES["alibaba_like"]
+    n = lat.shape[0]
+    reset_verified_schedule_count()
+    cfg = EngineConfig(
+        n_nodes=n, streaming=True, grouping=True, filtering=True,
+        tiv=True, planner="kcenter", epoch_ms=2.0, txn_exec_us=5.0,
+        verify_schedules=True,
+    )
+    eng = GeoCluster(cfg, bandwidth_mbps=100.0, seed=7)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=200, theta=0.9, read_ratio=0.3,
+                   hot_write_frac=0.3),
+        n, seed=3,
+    )
+    trace = jitter_trace(lat, 4, np.random.default_rng(17))
+    rs = eng.run(gen, trace, txns_per_node=10, n_epochs=4)
+    assert rs.wall_s > 0.0
+    # every simulated schedule passed the static verifier
+    assert verified_schedule_count() > 0
+
+
+# ---------------------------------------------------------------------------
+# Config compatibility: the declarative rule table
+# ---------------------------------------------------------------------------
+# Stub config classes (matching class *name*, which is how the stringly
+# rule table dispatches) let us probe individual rules — including invalid
+# states the real constructors refuse to build.
+
+
+def _engine_stub(**overrides):
+    fields = dict(
+        streaming=False, barrier=False, staleness_feedback=False,
+        serve=None, grouping=False, schedule_name=None,
+        resolved_schedule_name="all_to_all",
+    )
+    fields.update(overrides)
+    cfg = type("EngineConfig", (), {})()
+    for k, v in fields.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def _serve_stub(**overrides):
+    fields = dict(
+        read_ratio=0.9, max_staleness_ms=150.0, ops_per_client_s=1.0,
+        clients_per_node=1000.0, cache_keys=0, n_keys=1000,
+    )
+    fields.update(overrides)
+    cfg = type("ServeConfig", (), {})()
+    for k, v in fields.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def test_check_config_clean():
+    assert check_config(_engine_stub()) == []
+    assert check_config(_engine_stub(), stage="cluster") == []
+    assert check_config(_serve_stub()) == []
+
+
+def test_check_config_structured_diagnostics():
+    vs = check_config(_engine_stub(streaming=True, barrier=True))
+    assert [v.rule for v in vs] == ["streaming-x-barrier"]
+    assert "no barrier-phase semantics" in vs[0].message
+    # multiple violations surface together, in rule-table order
+    vs = check_config(_serve_stub(read_ratio=2.0, max_staleness_ms=-1.0))
+    assert [v.rule for v in vs] == ["read-ratio-range",
+                                    "staleness-bound-range"]
+
+
+def test_check_config_stage_gating():
+    # a named schedule without grouping is fine at construction but
+    # refused at engine attach (the historical raise location)
+    cfg = _engine_stub(schedule_name="hierarchical")
+    assert check_config(cfg) == []
+    vs = check_config(cfg, stage="cluster")
+    assert [v.rule for v in vs] == ["flat-engine-schedule"]
+    with pytest.raises(ValueError, match="requires grouping=True"):
+        validate_config(cfg, stage="cluster")
+    with pytest.raises(ValueError, match="unknown stage"):
+        check_config(cfg, stage="bogus")
+
+
+def test_check_config_grouped_builder_contract():
+    cfg = _engine_stub(grouping=True, resolved_schedule_name="all_to_all")
+    vs = check_config(cfg, stage="cluster")
+    assert [v.rule for v in vs] == ["grouped-schedule-contract"]
+    assert "group_payload_bytes" in vs[0].message
+
+
+def test_validate_config_raises_first_message():
+    with pytest.raises(ValueError, match=r"read_ratio must be in \[0, 1\]"):
+        validate_config(_serve_stub(read_ratio=-0.1, cache_keys=5000))
+
+
+def test_real_configs_still_validate():
+    # the migrated constructors route through validate_config
+    with pytest.raises(ValueError, match="requires streaming=True"):
+        EngineConfig(n_nodes=4, staleness_feedback=True)
+    from repro.serve import ServeConfig
+
+    with pytest.raises(ValueError, match="must be positive"):
+        ServeConfig(ops_per_client_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Determinism lint
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fixture,rule", [
+    ("wallclock.py", "wallclock"),
+    ("module_rng.py", "module-rng"),
+    ("unordered_set.py", "unordered-set-iter"),
+    ("mutable_default.py", "mutable-default"),
+    ("float_eq.py", "float-time-eq"),
+])
+def test_lint_fixture_trips_rule_exactly_once(fixture, rule):
+    violations = lint_file(FIXTURES / fixture)
+    assert [v.rule for v in violations] == [rule], violations
+
+
+def test_lint_clean_fixture():
+    # sanctioned idioms + an inline pragma: zero violations
+    assert lint_file(FIXTURES / "clean.py") == []
+
+
+def test_repo_is_lint_clean():
+    violations = lint_paths([REPO / "src", REPO / "benchmarks"])
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_lint_cli():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.analysis.lint"]
+    dirty = subprocess.run(
+        cmd + [str(FIXTURES / "wallclock.py")],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert dirty.returncode == 1
+    assert "wallclock" in dirty.stdout
+    clean = subprocess.run(
+        cmd + [str(FIXTURES / "clean.py")],
+        capture_output=True, text=True, env=env, cwd=REPO,
+    )
+    assert clean.returncode == 0, clean.stdout + clean.stderr
