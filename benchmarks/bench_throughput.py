@@ -27,7 +27,8 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
               streaming: bool = False, staleness_feedback: bool = False,
               epoch_ms: float = 10.0, planner: str = "milp",
               modeled_cpu: bool = False, serve=None, txns_per_node: int = 40,
-              verify_schedules: bool = False):
+              verify_schedules: bool = False, stream_mode: str = "incremental",
+              load=None):
     """Paper regime: Alibaba-cloud 5-node testbed, WAN bandwidth in the
     Fig. 3 constrained band (~15 Mbps to HK), 100 warehouses with hot item
     contention "to stress inter-node coordination" (Sec 6.3)."""
@@ -41,7 +42,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
         planner=planner, epoch_ms=epoch_ms, streaming=streaming,
         staleness_feedback=staleness_feedback,
         modeled_cpu=modeled_cpu, serve=serve,
-        verify_schedules=verify_schedules,
+        verify_schedules=verify_schedules, stream_mode=stream_mode,
     )
     wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     eng = GeoCluster(
@@ -53,6 +54,8 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
                    items_per_warehouse=50),
         n, seed=seed,
     )
+    if load is not None:
+        gen = load(gen)
     rs = eng.run(gen, trace, txns_per_node=txns_per_node, n_epochs=epochs)
     tpm_total = rs.throughput_tps * 60.0
     return rs, tpm_total

@@ -23,6 +23,7 @@ from . import (
     bench_compression,
     bench_group_number,
     bench_grouping_strategies,
+    bench_long_horizon,
     bench_loss_jitter,
     bench_makespan_cdf,
     bench_makespan_regression,
@@ -48,6 +49,9 @@ MODULES = [
     # read serving plane over the same measured staleness: bounded follower
     # reads, redirect/reject policies, geococo-vs-flat serving throughput
     ("serving", bench_serving),
+    # O(E) incremental timeline: 1000-epoch diurnal replay, identity vs the
+    # resim oracle, wall-clock scaling gate, vectorized-OCC speedup
+    ("long-horizon", bench_long_horizon),
     ("Fig12", bench_grouping_strategies),
     ("Fig13", bench_scaling_cost_benefit),
     ("Fig14+Table1", bench_bandwidth_filtering),
@@ -76,8 +80,10 @@ def main() -> None:
         "wan_simulator": "event-driven fluid-flow DAG",
         "bandwidth_admission": True,
         "barrier_reference": True,
-        "streaming": "stitched cross-epoch DAG (gated in makespan-regression;"
-                     " Fig11 records a streaming arm)",
+        "streaming": "incremental appendable timeline, O(E) per run "
+                     "(StreamingTimeline; stitch-and-resim retained as the "
+                     "reference oracle, identity gated in long-horizon; "
+                     "makespan-regression + Fig11 streaming arm unchanged)",
         "occ": {
             "validation": "epoch OCC: first-writer-wins incl. read-aborted "
                           "writers (no reinstatement), txn_id tie-break; "

@@ -33,6 +33,7 @@ from .config_check import ConfigRule, check_config, validate_config
 from .lint import lint_file, lint_paths
 from .schedule_check import (
     ScheduleVerificationError,
+    StreamScheduleVerifier,
     reset_verified_schedule_count,
     verified_schedule_count,
     verify_schedule,
@@ -44,6 +45,7 @@ __all__ = [
     "format_violations",
     "verify_schedule",
     "ScheduleVerificationError",
+    "StreamScheduleVerifier",
     "verified_schedule_count",
     "reset_verified_schedule_count",
     "ConfigRule",

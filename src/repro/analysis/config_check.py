@@ -153,6 +153,14 @@ RULES: list[ConfigRule] = [
         ),
     ),
     ConfigRule(
+        "stream-mode-value", "EngineConfig", "range", "config",
+        lambda cfg: (
+            "stream_mode must be 'incremental' (O(E) appendable timeline) "
+            "or 'resim' (the O(E²) stitch-and-rerun reference oracle)"
+            if cfg.stream_mode not in ("incremental", "resim") else None
+        ),
+    ),
+    ConfigRule(
         "grouped-schedule-contract", "EngineConfig", "contract", "cluster",
         _grouped_schedule_contract,
     ),

@@ -53,6 +53,7 @@ from .violations import Violation, format_violations
 
 __all__ = [
     "verify_schedule",
+    "StreamScheduleVerifier",
     "ScheduleVerificationError",
     "verified_schedule_count",
     "reset_verified_schedule_count",
@@ -273,6 +274,146 @@ def _check_clock_chain(transfers, out: list[Violation]) -> None:
                     f"({prev}); found clock deps {clock_deps}", index=i,
                 ))
         prev = i
+
+
+class StreamScheduleVerifier:
+    """Incremental (per-epoch) mode of :func:`verify_schedule` for
+    appendable stitched streams.
+
+    The one-shot verifier is O(V + E) over the *whole* stream, so calling
+    it per appended epoch would reintroduce the O(E²) cost the incremental
+    timeline exists to remove.  This verifier carries the cross-epoch
+    state instead (epoch counter, clock-chain tail, the previous epoch's
+    dependency frontier with its phase ranks) and checks each appended
+    segment in O(segment):
+
+    * all one-shot per-transfer rules (payload/compute sanity, node
+      bounds, local-stage purity) via the same ``_check_transfer_fields``;
+    * ``dep-bounds`` / ``topo-order`` against *global* stream indices
+      (which also implies acyclicity — every dependency is strictly
+      earlier);
+    * ``phase-monotone`` along every edge, external edges resolved through
+      the retained frontier ranks;
+    * ``stream-frontier`` (incremental-only rule): an external dependency
+      must land in the previous epoch's frontier (per-node commit
+      transfers, exec stages, clock tail) — anything older has been
+      evicted and would make the fold-in of external finish times unsound;
+    * ``epoch-contiguity`` (every segment transfer carries the current
+      epoch tag — appending is what makes tags contiguous) and
+      ``clock-chain`` (at most one clock per segment, chained to exactly
+      the retained tail).
+
+    Each clean segment counts toward :func:`verified_schedule_count`, the
+    same provenance signal the one-shot verifier feeds.
+    """
+
+    def __init__(self, n_nodes: int | None = None):
+        self.n_nodes = n_nodes
+        self.epoch = 0
+        self.size = 0                        # transfers verified so far
+        self._prev_clock: int | None = None  # global index of the chain tail
+        self._frontier_ranks: dict[int, int] = {}
+
+    def check_epoch(
+        self,
+        transfers: Any,
+        ranks: Any,
+        *,
+        frontier: Any,
+    ) -> list[Violation]:
+        """Verify one appended segment (global dep indices, admission
+        ranks) and advance the carried state.  ``frontier`` is the global
+        index set the *next* epoch may depend on (``StitchState.
+        frontier()`` after this append).  Returns all violations found."""
+        global _VERIFIED_SCHEDULES
+        out: list[Violation] = []
+        transfers = list(transfers)
+        ranks = list(ranks)
+        base = self.size
+        hi = base + len(transfers)
+        _check_transfer_fields(transfers, self.n_nodes, out)
+        if len(ranks) != len(transfers):
+            out.append(Violation(
+                "phase-shape",
+                f"segment has {len(ranks)} ranks for {len(transfers)} "
+                "transfers",
+            ))
+            ranks = ranks + [0] * (len(transfers) - len(ranks))
+        known = self._frontier_ranks
+        clocks: list[int] = []
+        for i, t in enumerate(transfers):
+            gi = base + i
+            if t.epoch != self.epoch:
+                out.append(Violation(
+                    "epoch-contiguity",
+                    f"segment transfer carries epoch {t.epoch}, appending "
+                    f"epoch {self.epoch} (tags are contiguous by "
+                    "construction)", index=gi,
+                ))
+            if t.tag == "clock":
+                clocks.append(gi)
+            for d in t.deps:
+                if not 0 <= d < hi:
+                    out.append(Violation(
+                        "dep-bounds",
+                        f"dependency {d} outside [0, {hi})", index=gi,
+                    ))
+                    continue
+                if d >= gi:
+                    out.append(Violation(
+                        "topo-order",
+                        f"dependency {d} does not precede its dependent "
+                        "(stream indices are topologically ordered)",
+                        index=gi,
+                    ))
+                    continue
+                if d >= base:
+                    dep_rank = ranks[d - base]
+                elif d in known:
+                    dep_rank = known[d]
+                else:
+                    out.append(Violation(
+                        "stream-frontier",
+                        f"external dependency {d} is not in the previous "
+                        "epoch's frontier (commit/exec/clock indices): its "
+                        "finish time has been evicted", index=gi,
+                    ))
+                    continue
+                if dep_rank >= ranks[i]:
+                    out.append(Violation(
+                        "phase-monotone",
+                        f"phase {ranks[i]} depends on transfer {d} of "
+                        f"phase {dep_rank}: phases must strictly increase "
+                        "along dependency edges (the bandwidth-admission "
+                        "theorem's precondition)", index=gi,
+                    ))
+        if len(clocks) > 1:
+            out.append(Violation(
+                "clock-chain",
+                f"segment has {len(clocks)} clock stages; stitching emits "
+                "at most one per epoch", index=clocks[1],
+            ))
+        for gi in clocks:
+            t = transfers[gi - base]
+            want = () if self._prev_clock is None else (self._prev_clock,)
+            if tuple(t.deps) != want:
+                out.append(Violation(
+                    "clock-chain",
+                    f"clock must chain to exactly the previous clock "
+                    f"(deps {want}); found deps {tuple(t.deps)}", index=gi,
+                ))
+        if clocks:
+            self._prev_clock = clocks[-1]
+        # the frontier is always inside the segment just appended (the
+        # stitcher rebuilds prev_commit/prev_exec/prev_clock every epoch)
+        self._frontier_ranks = {
+            g: ranks[g - base] for g in frontier if base <= g < hi
+        }
+        self.size = hi
+        self.epoch += 1
+        if not out:
+            _VERIFIED_SCHEDULES += 1
+        return out
 
 
 def verify_schedule(

@@ -53,6 +53,7 @@ from .planner import (
 )
 from .replication import EngineConfig, EpochStats, GeoCluster, RaftCluster, RunStats
 from .schedule import (
+    StitchState,
     Transfer,
     TransmissionSchedule,
     all_to_all_schedule,
@@ -62,7 +63,8 @@ from .schedule import (
     messages_per_node,
     stitch_schedules,
 )
-from .simulator import RoundResult, WANSimulator, node_commit_ms
+from .simulator import NicState, RoundResult, WANSimulator, node_commit_ms
+from .stream import EpochTimings, StreamingTimeline
 from .whitedata import (
     FilterResult,
     FilterStats,
@@ -72,6 +74,7 @@ from .whitedata import (
 )
 from .workload import (
     TPCC_MIXES,
+    DiurnalLoad,
     TPCCConfig,
     TPCCGenerator,
     YCSBConfig,

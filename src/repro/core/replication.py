@@ -79,6 +79,7 @@ from .schedule import (
     stitch_schedules,
 )
 from .simulator import WANSimulator, node_commit_ms
+from .stream import StreamingTimeline
 from .whitedata import FilterResult, FilterStats, filter_group_batch
 
 # the serving plane lives above this engine (it consumes measured commit
@@ -135,6 +136,13 @@ class EngineConfig:
     modeled_cpu: bool = False
     filter_cpu_ns_per_byte: float = 2.0
     compress_cpu_ns_per_byte: float = 15.0
+    # how the streaming engine times the cross-epoch stream:
+    # "incremental" (default) appends each epoch onto a StreamingTimeline
+    # and simulates only the new events — O(E) total, byte-identical to the
+    # full re-simulation by the bandwidth-admission finality argument;
+    # "resim" keeps the O(E²) stitch-everything-and-rerun oracle
+    # (repro.core.stream documents the identity argument; tests pin it).
+    stream_mode: str = "incremental"
     # debug hook: statically verify every schedule the engine simulates
     # (repro.analysis.schedule_check.verify_schedule — acyclicity, phase
     # monotonicity along deps, clock-chain linearity, payload/node sanity)
@@ -808,7 +816,13 @@ class GeoCluster:
     def _stream_prefix(self, rounds: list["_EpochRound"]):
         """Stitch the epochs prepared so far and run the streaming event
         simulation over them.  Returns (per-node commit-time matrix,
-        stream RoundResult, stitched schedule)."""
+        stream RoundResult, stitched schedule).
+
+        This is the O(E²) reference oracle (``stream_mode="resim"``): with
+        feedback it re-simulates the whole prefix every epoch.  The default
+        ``stream_mode="incremental"`` appends onto a
+        :class:`~repro.core.stream.StreamingTimeline` instead, with
+        byte-identical timings (tested against this method)."""
         cfg = self.cfg
         stitched = stitch_schedules(
             [r.schedule for r in rounds],
@@ -869,18 +883,30 @@ class GeoCluster:
         becomes a function of network conditions.  (Write-set *sends*
         remain gated on the node's previous-epoch commit, as in the
         stitched timing DAG: execution is optimistic, transmission stays
-        ordered.)  The stitched prefix is re-simulated as epochs append —
-        with bandwidth admission an earlier epoch's measured times are
-        unaffected by later arrivals, so the prefix times are final.
+        ordered.)  The stream is timed incrementally by default
+        (``stream_mode="incremental"``): each epoch appends onto a
+        :class:`~repro.core.stream.StreamingTimeline` that simulates only
+        the new events — with bandwidth admission an earlier epoch's
+        measured times are unaffected by later arrivals, so the prefix
+        times are final and the incremental timings are byte-identical to
+        re-simulating the whole prefix (``stream_mode="resim"``, the O(E²)
+        reference oracle).
         """
         cfg = self.cfg
         feedback = cfg.staleness_feedback
+        incremental = cfg.stream_mode == "incremental"
         rounds: list[_EpochRound] = []
         sims: list[WANSimulator] = []
         results = []
         lags: list[tuple[float, int]] = []
         views = view_next = commit_ms = None
         stream = stitched = None
+        timeline = None
+        if incremental:
+            timeline = StreamingTimeline(
+                cfg.n_nodes, bandwidth_mbps=self.bandwidth, loss=self.loss,
+                epoch_ms=cfg.epoch_ms, verify=cfg.verify_schedules,
+            )
         if feedback:
             views = [DeltaCRDTStore(i) for i in range(cfg.n_nodes)]
             view_next = np.zeros(cfg.n_nodes, dtype=int)
@@ -905,21 +931,36 @@ class GeoCluster:
             rounds.append(rnd)
             sims.append(sim)
             results.append(res)
-            if feedback:
+            if incremental:
+                # O(this epoch's events): the timeline carries the stream
+                # frontier, so the commit matrix is always current
+                timeline.append_epoch(rnd.schedule, lat,
+                                      node_exec_ms=rnd.node_exec_ms)
+                if feedback:
+                    commit_ms = timeline.commit_ms
+            elif feedback:
                 # measured staleness for the *next* epoch's views; the last
                 # iteration's prefix is the full stream the stats consume
                 commit_ms, stream, stitched = self._stream_prefix(rounds)
         if not rounds:
             return [], None
 
-        if stream is None:
-            commit_ms, stream, stitched = self._stream_prefix(rounds)
+        if incremental:
+            commit_ms = timeline.commit_ms
+            commit_marks = np.asarray(timeline.finish_max_ms)
+        else:
+            if stream is None:
+                commit_ms, stream, stitched = self._stream_prefix(rounds)
+            # per-epoch absolute commit marks in one grouped pass (the old
+            # per-epoch `finish_ms[epoch_of == k].max()` scan was quadratic)
+            epoch_of = np.array([t.epoch for t in stitched.transfers])
+            commit_marks = np.full(len(rounds), -np.inf)
+            np.maximum.at(commit_marks, epoch_of, stream.finish_ms)
 
-        epoch_of = np.array([t.epoch for t in stitched.transfers])
         epochs: list[EpochStats] = []
         prev_commit = 0.0
         for k, (rnd, sim, res) in enumerate(zip(rounds, sims, results)):
-            commit = float(stream.finish_ms[epoch_of == k].max())
+            commit = float(commit_marks[k])
             wall = commit - prev_commit
             prev_commit = commit
             formula = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
@@ -1122,15 +1163,36 @@ class RaftCluster:
         if hit is not None:
             self.commit_cache_hits += 1
             return hit
-        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng)
         plan = self._plan(lat, mat_key) if self.grouping else None
         one = leader_schedule(self.n, leader, payload_bytes, plan)
-        stitched = stitch_schedules([one] * batches, n=self.n)
-        res = sim.run(stitched)
-        val = self._quorum_ms(res, stitched.transfers, leader,
+        # incremental timeline: only the last batch's segment matters for
+        # the quorum, and appending is O(batch) instead of re-simulating
+        # the whole stitched stream (byte-identical — see repro.core.stream;
+        # _pipelined_commit_ms_resim is the tested oracle)
+        timeline = StreamingTimeline(self.n, bandwidth_mbps=self.bandwidth,
+                                     loss=self.loss)
+        for _ in range(batches):
+            et = timeline.append_epoch(one, lat)
+        val = self._quorum_ms(et, et.transfers, leader,
                               self._ack_ms(lat), epoch=batches - 1)
         self._commit_cache[key] = val
         return val
+
+    def _pipelined_commit_ms_resim(
+        self, lat: np.ndarray, leader: int, payload_bytes: float,
+        batches: int,
+    ) -> float:
+        """O(batches²) reference oracle for :meth:`pipelined_commit_ms`:
+        stitch every batch and re-run the full event simulation.  Kept
+        uncached for the incremental-identity regression tests."""
+        lat = np.asarray(lat, dtype=float)
+        sim = WANSimulator(lat, self.bandwidth, loss=self.loss, rng=self.rng)
+        plan = self._plan(lat, lat.tobytes()) if self.grouping else None
+        one = leader_schedule(self.n, leader, payload_bytes, plan)
+        stitched = stitch_schedules([one] * batches, n=self.n)
+        res = sim.run(stitched)
+        return self._quorum_ms(res, stitched.transfers, leader,
+                               self._ack_ms(lat), epoch=batches - 1)
 
     def throughput(
         self,

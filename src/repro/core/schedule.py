@@ -49,6 +49,7 @@ __all__ = [
     "hierarchical_schedule",
     "leader_schedule",
     "stitch_schedules",
+    "StitchState",
     "messages_per_node",
     "max_messages_per_node",
 ]
@@ -425,47 +426,101 @@ def stitch_schedules(
     if n <= 0:
         raise ValueError("cannot infer node count from empty schedules")
 
+    st = StitchState(n, epoch_ms=epoch_ms)
     flat: list[Transfer] = []
     ranks: list[int] = []
-    prev_commit: dict[int, list[int]] = {i: [] for i in range(n)}
-    prev_exec: dict[int, int] = {}
-    prev_clock: int | None = None
-    rank_base = 0
     for k, sk in enumerate(rounds):
-        if epoch_ms > 0.0 and k >= 1:
-            clock_deps = () if prev_clock is None else (prev_clock,)
-            prev_clock = len(flat)
-            flat.append(Transfer(0, 0, 0.0, tag="clock", deps=clock_deps,
-                                 compute_ms=float(epoch_ms), epoch=k))
-            ranks.append(rank_base)
-        exec_idx: dict[int, int] = {}
-        for i in range(n):
-            deps: list[int] = []
-            if prev_clock is not None:
-                deps.append(prev_clock)
-            if i in prev_exec:
-                deps.append(prev_exec[i])
-            deps.extend(prev_commit[i])
-            cms = 0.0
-            if node_exec_ms is not None and i < len(node_exec_ms[k]):
-                cms = float(node_exec_ms[k][i])
-            exec_idx[i] = len(flat)
-            flat.append(Transfer(i, i, 0.0, tag="exec", deps=tuple(deps),
-                                 compute_ms=cms, epoch=k))
-            ranks.append(rank_base + 1)
-        off = len(flat)
-        rk = list(sk.phase_of) if sk.phase_of is not None else sk.dep_levels()
-        commit: dict[int, list[int]] = {i: [] for i in range(n)}
-        for j, t in enumerate(sk.transfers):
-            deps = tuple(d + off for d in t.deps) + (exec_idx[t.src],)
-            if t.src != t.dst:
-                commit[t.dst].append(len(flat))
-            flat.append(dataclasses.replace(t, deps=deps, epoch=k))
-            ranks.append(rank_base + 2 + rk[j])
-        prev_commit = commit
-        prev_exec = exec_idx
-        rank_base += 2 + (max(rk) + 1 if rk else 0)
+        row = node_exec_ms[k] if node_exec_ms is not None else None
+        seg, seg_ranks = st.append(sk, row)
+        flat.extend(seg)
+        ranks.extend(seg_ranks)
     return TransmissionSchedule(flat, label=label, phase_of=tuple(ranks))
+
+
+class StitchState:
+    """The per-epoch step of :func:`stitch_schedules`, factored out so the
+    incremental timeline (:class:`repro.core.stream.StreamingTimeline`) and
+    the one-shot stitcher build *the same* stream structure by construction.
+
+    Owns the cross-epoch frontier: per-node inbound commit indices
+    (``prev_commit``), per-node exec-stage indices (``prev_exec``), the
+    cadence clock-chain tail (``prev_clock``) and the running admission
+    rank offset (``rank_base``).  Every :meth:`append` emits one epoch's
+    stitched segment — transfers whose dependency indices are **global**
+    (into the concatenated stream) and their admission ranks — and advances
+    the frontier.  Concatenating the segments of ``k`` appends is exactly
+    ``stitch_schedules(rounds[:k])``.
+    """
+
+    def __init__(self, n: int, *, epoch_ms: float = 0.0):
+        if n <= 0:
+            raise ValueError("node count must be positive")
+        self.n = n
+        self.epoch_ms = float(epoch_ms)
+        self.epoch = 0                      # next epoch to be appended
+        self.size = 0                       # transfers emitted so far
+        self.rank_base = 0
+        self.prev_commit: dict[int, list[int]] = {i: [] for i in range(n)}
+        self.prev_exec: dict[int, int] = {}
+        self.prev_clock: int | None = None
+
+    def frontier(self) -> list[int]:
+        """Global indices a future epoch's dependencies may reference: the
+        last epoch's per-node commit transfers, exec stages and clock tail.
+        Everything earlier is unreachable from appended epochs — the
+        timeline evicts its finish-time state down to this set."""
+        out: list[int] = []
+        if self.prev_clock is not None:
+            out.append(self.prev_clock)
+        out.extend(self.prev_exec.values())
+        for lst in self.prev_commit.values():
+            out.extend(lst)
+        return out
+
+    def append(
+        self, sk: TransmissionSchedule,
+        node_exec_row: Sequence[float] | None = None,
+    ) -> tuple[list[Transfer], list[int]]:
+        k = self.epoch
+        base = self.size
+        seg: list[Transfer] = []
+        ranks: list[int] = []
+        if self.epoch_ms > 0.0 and k >= 1:
+            clock_deps = () if self.prev_clock is None else (self.prev_clock,)
+            self.prev_clock = base + len(seg)
+            seg.append(Transfer(0, 0, 0.0, tag="clock", deps=clock_deps,
+                                compute_ms=self.epoch_ms, epoch=k))
+            ranks.append(self.rank_base)
+        exec_idx: dict[int, int] = {}
+        for i in range(self.n):
+            deps: list[int] = []
+            if self.prev_clock is not None:
+                deps.append(self.prev_clock)
+            if i in self.prev_exec:
+                deps.append(self.prev_exec[i])
+            deps.extend(self.prev_commit[i])
+            cms = 0.0
+            if node_exec_row is not None and i < len(node_exec_row):
+                cms = float(node_exec_row[i])
+            exec_idx[i] = base + len(seg)
+            seg.append(Transfer(i, i, 0.0, tag="exec", deps=tuple(deps),
+                                compute_ms=cms, epoch=k))
+            ranks.append(self.rank_base + 1)
+        off = base + len(seg)
+        rk = list(sk.phase_of) if sk.phase_of is not None else sk.dep_levels()
+        commit: dict[int, list[int]] = {i: [] for i in range(self.n)}
+        for j, t in enumerate(sk.transfers):
+            deps_t = tuple(d + off for d in t.deps) + (exec_idx[t.src],)
+            if t.src != t.dst:
+                commit[t.dst].append(base + len(seg))
+            seg.append(dataclasses.replace(t, deps=deps_t, epoch=k))
+            ranks.append(self.rank_base + 2 + rk[j])
+        self.prev_commit = commit
+        self.prev_exec = exec_idx
+        self.rank_base += 2 + (max(rk) + 1 if rk else 0)
+        self.size += len(seg)
+        self.epoch += 1
+        return seg, ranks
 
 
 # registry wiring: transmission-schedule builders are addressable by name so

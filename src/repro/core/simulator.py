@@ -19,6 +19,19 @@ Two execution engines over the same wire model:
   :class:`RoundResult` exposes via per-transfer start/finish times and a
   backtracked critical-path trace.
 
+  The engine is *lazy per flow*: a flow's byte integration is materialized
+  only at events on its own two directed NICs (its src out-NIC and dst
+  in-NIC), and finishes are projected drain events invalidated by a token
+  when the NIC population changes.  Events elsewhere in the DAG never touch
+  the flow's floating-point state, so a flow's measured times are a pure
+  function of its NIC-local event history.  That locality is what makes
+  **incremental simulation exact**: under bandwidth admission a later
+  epoch's flows never share a NIC in time with an earlier epoch's, so
+  :meth:`WANSimulator.simulate_segment` can replay one appended epoch
+  against carried :class:`NicState` floors and reproduce the full
+  re-simulation's times byte-for-byte
+  (:class:`repro.core.stream.StreamingTimeline` builds on this).
+
   **Bandwidth admission** (``admission=True``, the default): a ready hop is
   *deferred* while either of its NICs still carries undrained flows of a
   strictly earlier phase rank — a later-phase exchange/scatter can never
@@ -78,7 +91,27 @@ import numpy as np
 
 from .schedule import Transfer, TransmissionSchedule
 
-__all__ = ["WANSimulator", "RoundResult", "node_commit_ms"]
+__all__ = ["WANSimulator", "RoundResult", "NicState", "node_commit_ms"]
+
+
+@dataclasses.dataclass
+class NicState:
+    """Per-directed-NIC admission floors carried across appended segments.
+
+    ``clear_out[i]`` / ``clear_in[i]`` is the last drain time of any
+    byte-moving hop on node ``i``'s out-/in-NIC so far.  Under bandwidth
+    admission every hop of a later segment has a strictly higher rank than
+    everything already streamed, so it may not occupy either of its NICs
+    before these floors — exactly when the full re-simulation's ``min_out``
+    / ``min_in`` would have advanced past the earlier epochs' ranks.
+    """
+
+    clear_out: np.ndarray
+    clear_in: np.ndarray
+
+    @classmethod
+    def zeros(cls, n: int) -> "NicState":
+        return cls(np.zeros(n), np.zeros(n))
 
 
 @dataclasses.dataclass
@@ -369,6 +402,269 @@ class WANSimulator:
             rank[i] = r
         return rank
 
+    def _simulate_dag(
+        self,
+        transfers: Sequence[Transfer],
+        prop_fn,
+        rank: np.ndarray | None,
+        *,
+        deps: Sequence[tuple[int, ...]] | None = None,
+        ext_ready: Sequence[float] | None = None,
+        nic: NicState | None = None,
+        tid_base: int = 0,
+    ):
+        """Lazy per-flow event simulation of one transfer list.
+
+        ``deps`` (default: each transfer's own ``deps``) must be local
+        indices into ``transfers``; dependencies on transfers simulated
+        earlier (a previous segment) are folded into ``ext_ready[i]`` — the
+        earliest time transfer ``i``'s external dependencies allow it to
+        become ready (its ``compute_ms`` is added on top, exactly as a live
+        dependency's delivery would be).  ``nic`` carries the per-directed-
+        NIC clear floors across segments and is updated in place.
+        ``tid_base`` offsets the event keys so a segment's events tie-break
+        identically to the same transfers inside a full stitched run —
+        equal-time event order is part of the byte-identity contract.
+
+        A flow's floating-point state (remaining bytes, current rate,
+        last-materialization time) is touched only by events on its own two
+        directed NICs; finishes are projected drain events invalidated by a
+        per-flow token.  Returns ``(start, finish, pred)``.
+        """
+        m = len(transfers)
+        if deps is None:
+            deps = [t.deps for t in transfers]
+        hops = [  # per transfer: the 1 or 2 (src, dst) wire hops
+            [(t.src, t.dst)] if t.via < 0 else [(t.src, t.via), (t.via, t.dst)]
+            for t in transfers
+        ]
+        indeg = [len(ds) for ds in deps]
+        children: list[list[int]] = [[] for _ in range(m)]
+        for i, ds in enumerate(deps):
+            for d in ds:
+                children[d].append(i)
+
+        # bandwidth admission: register every byte-moving hop on its NICs up
+        # front, bucketed by admission rank.  A ready hop starts only when no
+        # *undrained* lower-rank hop shares its src out-NIC or dst in-NIC —
+        # arrival order is irrelevant, so per NIC the live flows always share
+        # one rank and never exceed that phase's static degree (the invariant
+        # behind the event <= barrier theorem).  Ranks are rebased by the
+        # segment minimum so an appended epoch's pend table stays O(segment).
+        rankb: list[int] | None = None
+        if rank is not None:
+            rmin = int(rank.min()) if m else 0
+            n_ranks = (int(rank.max()) - rmin + 1) if m else 1
+            rankb = [int(r) - rmin for r in rank]
+            pend_out = np.zeros((self.n, n_ranks), dtype=int)
+            pend_in = np.zeros((self.n, n_ranks), dtype=int)
+            for i, t in enumerate(transfers):
+                if t.src == t.dst or t.nbytes <= 0.0:
+                    continue
+                for s, d in hops[i]:
+                    if np.isfinite(self.bw[s, d]):
+                        pend_out[s, rankb[i]] += 1
+                        pend_in[d, rankb[i]] += 1
+            # cached min pending rank per directed NIC (only ever advances:
+            # all hops are registered up front and only drains decrement)
+            min_out = np.zeros(self.n, dtype=int)
+            min_in = np.zeros(self.n, dtype=int)
+
+            def _advance(pend, mins, node):
+                while mins[node] < n_ranks and pend[node, mins[node]] == 0:
+                    mins[node] += 1
+
+            for node in range(self.n):
+                _advance(pend_out, min_out, node)
+                _advance(pend_in, min_in, node)
+
+        parked: list[tuple[int, int]] = []  # hops deferred by admission
+
+        start = np.full(m, np.nan)      # wire start (after deps + compute)
+        finish = np.full(m, np.nan)     # delivery of the final hop at dst
+        pred = np.full(m, -1, dtype=int)  # latest-finishing dependency
+
+        # lazy per-flow fluid state
+        active = [False] * m
+        rem = [0.0] * m                 # remaining bytes, current hop
+        rate = [0.0] * m                # bytes/ms under current contention
+        seg_t = [0.0] * m               # time rem was last materialized
+        token = [0] * m                 # invalidates stale drain projections
+        cur = [(0, 0, 0)] * m           # current hop (s, d, hop)
+        out_cnt = np.zeros(self.n, dtype=int)
+        in_cnt = np.zeros(self.n, dtype=int)
+        # insertion-ordered id sets of live flows per directed NIC (order is
+        # never observable — each flow's update is independent — but dicts
+        # keep iteration reproducible for free)
+        out_flows: list[dict[int, None]] = [{} for _ in range(self.n)]
+        in_flows: list[dict[int, None]] = [{} for _ in range(self.n)]
+
+        READY, DELIVER, DRAIN = 0, 1, 2
+        # event keys order by (time, kind, global tid, aux): canonical across
+        # full and segment runs — `serial` only breaks exact duplicates
+        events: list[tuple[float, int, int, int, int, int]] = []
+        serial = 0
+
+        def push(time: float, kind: int, tid: int, aux: int):
+            nonlocal serial
+            heapq.heappush(events, (time, kind, tid_base + tid, aux, serial,
+                                    tid))
+            serial += 1
+
+        def retune(s: int, d: int, now: float):
+            """Re-solve every flow sharing the two touched NICs: integrate
+            its bytes up to ``now`` at the old rate, then re-rate under the
+            new population and re-project its drain."""
+            touched = dict(out_flows[s])
+            touched.update(in_flows[d])
+            for j in touched:
+                if now > seg_t[j]:
+                    rem[j] -= rate[j] * (now - seg_t[j])
+                    seg_t[j] = now
+                js, jd, _ = cur[j]
+                c = max(int(out_cnt[js]), int(in_cnt[jd]), 1)
+                rate[j] = float(self.bw[js, jd]) * 1e6 / 8.0 / 1e3 / c
+                token[j] += 1
+                left = rem[j] / rate[j] if rem[j] > 0.0 else 0.0
+                push(seg_t[j] + left, DRAIN, j, token[j])
+
+        def begin_hop(now: float, tid: int, hop: int):
+            s, d = hops[tid][hop]
+            t = transfers[tid]
+            if s == d or t.nbytes <= 0.0 or not np.isfinite(self.bw[s, d]):
+                # nothing to serialize: deliver after propagation only
+                if hop == 0:
+                    start[tid] = now
+                push(now + prop_fn(tid, s, d), DELIVER, tid, hop)
+                return
+            if nic is not None:
+                floor = max(float(nic.clear_out[s]), float(nic.clear_in[d]))
+                if now < floor:
+                    # an earlier segment still occupies a NIC: retry exactly
+                    # when the full run's admission would have cleared it
+                    push(floor, READY, tid, hop)
+                    return
+            if rankb is not None and (
+                min_out[s] < rankb[tid] or min_in[d] < rankb[tid]
+            ):
+                parked.append((tid, hop))  # dst/src NIC busy with earlier phase
+                return
+            if hop == 0:
+                start[tid] = now
+            active[tid] = True
+            rem[tid] = float(t.nbytes)
+            seg_t[tid] = now
+            cur[tid] = (s, d, hop)
+            out_cnt[s] += 1
+            in_cnt[d] += 1
+            out_flows[s][tid] = None
+            in_flows[d][tid] = None
+            retune(s, d, now)
+
+        for i in range(m):
+            if indeg[i] == 0:
+                rt = 0.0 if ext_ready is None else float(ext_ready[i])
+                push(rt + transfers[i].compute_ms, READY, i, 0)
+
+        while events:
+            now, kind, _gid, aux, _serial, tid = heapq.heappop(events)
+            if kind == READY:
+                begin_hop(now, tid, aux)
+            elif kind == DRAIN:
+                if not active[tid] or aux != token[tid]:
+                    continue  # stale projection: the NIC population changed
+                active[tid] = False
+                rem[tid] = 0.0
+                s, d, hop = cur[tid]
+                out_cnt[s] -= 1
+                in_cnt[d] -= 1
+                del out_flows[s][tid]
+                del in_flows[d][tid]
+                if nic is not None:
+                    nic.clear_out[s] = now
+                    nic.clear_in[d] = now
+                push(now + prop_fn(tid, s, d), DELIVER, tid, hop)
+                if rankb is not None:
+                    r = rankb[tid]
+                    pend_out[s, r] -= 1
+                    pend_in[d, r] -= 1
+                    _advance(pend_out, min_out, s)
+                    _advance(pend_in, min_in, d)
+                    if parked:
+                        # the drain may have unblocked deferred hops; ready
+                        # ones start now, the rest re-park inside begin_hop
+                        pk, parked[:] = list(parked), []
+                        for tid2, hop2 in pk:
+                            begin_hop(now, tid2, hop2)
+                retune(s, d, now)
+            else:  # DELIVER
+                if aux + 1 < len(hops[tid]):
+                    begin_hop(now, tid, aux + 1)  # store-and-forward relay
+                    continue
+                finish[tid] = now
+                for c in children[tid]:
+                    if pred[c] < 0 or finish[pred[c]] <= now:
+                        pred[c] = tid
+                    indeg[c] -= 1
+                    if indeg[c] == 0:
+                        rt = now if ext_ready is None else max(
+                            now, float(ext_ready[c])
+                        )
+                        push(rt + transfers[c].compute_ms, READY, c, 0)
+
+        if parked:  # unreachable: ranks strictly increase along deps
+            raise RuntimeError(
+                f"admission deadlock: {len(parked)} hops still parked"
+            )
+        return start, finish, pred
+
+    def simulate_segment(
+        self,
+        transfers: Sequence[Transfer],
+        *,
+        rank: np.ndarray,
+        deps: Sequence[tuple[int, ...]],
+        ext_ready: Sequence[float],
+        nic: NicState,
+        lat: np.ndarray | None = None,
+        tid_base: int = 0,
+    ):
+        """Simulate one appended segment of a stitched stream against the
+        carried cross-segment state (:class:`NicState` floors, folded
+        external-dependency ready times) — the incremental half of the
+        byte-identity contract (see :class:`repro.core.stream.
+        StreamingTimeline`).  ``lat`` is this segment's latency matrix
+        (each appended epoch sees its own trace step, like ``run(...,
+        lats=[...])``).  Returns ``(start, finish, pred)`` and updates
+        ``nic`` in place."""
+        if self.barrier:
+            raise ValueError(
+                "segment simulation requires the event engine: barrier "
+                "phases have no cross-segment semantics"
+            )
+        if not self.admission:
+            raise ValueError(
+                "segment simulation is only sound under bandwidth admission "
+                "(admission=False lets later segments slow earlier flows)"
+            )
+        if self.stochastic_loss:
+            raise ValueError(
+                "segment simulation rejects stochastic_loss=True: the "
+                "retransmission draws happen in event order, which differs "
+                "between incremental and full runs"
+            )
+        lat_m = self.lat if lat is None else np.asarray(lat, dtype=float)
+
+        def prop_fn(tid: int, s: int, d: int) -> float:
+            if s == d:
+                return 0.0  # local compute stage
+            return self._prop_ms(s, d, lat=lat_m)
+
+        return self._simulate_dag(
+            transfers, prop_fn, rank, deps=deps, ext_ready=ext_ready,
+            nic=nic, tid_base=tid_base,
+        )
+
     def _run_event(self, schedule: TransmissionSchedule,
                    lats: Sequence[np.ndarray] | None = None) -> RoundResult:
         transfers = schedule.transfers
@@ -394,163 +690,8 @@ class WANSimulator:
                 s, d, lat=stack[min(transfers[tid].epoch, len(stack) - 1)]
             )
 
-        hops = [  # per transfer: the 1 or 2 (src, dst) wire hops
-            [(t.src, t.dst)] if t.via < 0 else [(t.src, t.via), (t.via, t.dst)]
-            for t in transfers
-        ]
-        indeg = [len(t.deps) for t in transfers]
-        children: list[list[int]] = [[] for _ in range(m)]
-        for i, t in enumerate(transfers):
-            for d in t.deps:
-                children[d].append(i)
-
-        # bandwidth admission: register every byte-moving hop on its NICs up
-        # front, bucketed by admission rank.  A ready hop starts only when no
-        # *undrained* lower-rank hop shares its src out-NIC or dst in-NIC —
-        # arrival order is irrelevant, so per NIC the live flows always share
-        # one rank and never exceed that phase's static degree (the invariant
-        # behind the event <= barrier theorem).
         rank = self._admission_ranks(schedule) if self.admission else None
-        if rank is not None:
-            n_ranks = int(rank.max()) + 1
-            pend_out = np.zeros((self.n, n_ranks), dtype=int)
-            pend_in = np.zeros((self.n, n_ranks), dtype=int)
-            for i, t in enumerate(transfers):
-                if t.src == t.dst or t.nbytes <= 0.0:
-                    continue
-                for s, d in hops[i]:
-                    if np.isfinite(self.bw[s, d]):
-                        pend_out[s, rank[i]] += 1
-                        pend_in[d, rank[i]] += 1
-            # cached min pending rank per directed NIC (only ever advances:
-            # all hops are registered up front and only drains decrement)
-            min_out = np.zeros(self.n, dtype=int)
-            min_in = np.zeros(self.n, dtype=int)
-
-            def _advance(pend, mins, node):
-                while mins[node] < n_ranks and pend[node, mins[node]] == 0:
-                    mins[node] += 1
-
-            for node in range(self.n):
-                _advance(pend_out, min_out, node)
-                _advance(pend_in, min_in, node)
-
-        parked: list[tuple[int, int]] = []  # hops deferred by admission
-
-        start = np.full(m, np.nan)      # wire start (after deps + compute)
-        finish = np.full(m, np.nan)     # delivery of the final hop at dst
-        pred = np.full(m, -1, dtype=int)  # latest-finishing dependency
-        # timed events: (time, seq, kind, tid, hop)
-        #   kind 0 = hop starts transmitting, 1 = hop delivered
-        events: list[tuple[float, int, int, int, int]] = []
-        seq = 0
-        # live byte-flows, vectorized (the loop re-solves every flow's rate
-        # at each event, so this state must be numpy, not a dict)
-        active = np.zeros(m, dtype=bool)
-        rem = np.zeros(m)                      # remaining bytes, current hop
-        cur_s = np.zeros(m, dtype=int)         # current hop endpoints
-        cur_d = np.zeros(m, dtype=int)
-        cur_hop = np.zeros(m, dtype=int)
-        out_cnt = np.zeros(self.n, dtype=int)
-        in_cnt = np.zeros(self.n, dtype=int)
-
-        def push(time: float, kind: int, tid: int, hop: int):
-            nonlocal seq
-            heapq.heappush(events, (time, seq, kind, tid, hop))
-            seq += 1
-
-        def begin_hop(now: float, tid: int, hop: int):
-            s, d = hops[tid][hop]
-            t = transfers[tid]
-            if s == d or t.nbytes <= 0.0 or not np.isfinite(self.bw[s, d]):
-                # nothing to serialize: deliver after propagation only
-                if hop == 0:
-                    start[tid] = now
-                push(now + prop_ms(tid, s, d), 1, tid, hop)
-                return
-            if rank is not None and (
-                min_out[s] < rank[tid] or min_in[d] < rank[tid]
-            ):
-                parked.append((tid, hop))  # dst/src NIC busy with earlier phase
-                return
-            if hop == 0:
-                start[tid] = now
-            active[tid] = True
-            rem[tid] = float(t.nbytes)
-            cur_s[tid], cur_d[tid], cur_hop[tid] = s, d, hop
-            out_cnt[s] += 1
-            in_cnt[d] += 1
-
-        for i in range(m):
-            if indeg[i] == 0:
-                push(transfers[i].compute_ms, 0, i, 0)
-
-        now = 0.0
-        EPS = 1e-9
-        while events or active.any():
-            # next discrete event vs. earliest live-flow drain, under the
-            # current contention (equal share of the busier endpoint NIC)
-            t_evt = events[0][0] if events else np.inf
-            t_drain = np.inf
-            drain_tid = -1
-            a = np.flatnonzero(active)
-            if a.size:
-                c = np.maximum(
-                    np.maximum(out_cnt[cur_s[a]], in_cnt[cur_d[a]]), 1
-                )
-                rates = self.bw[cur_s[a], cur_d[a]] * 1e6 / 8.0 / 1e3 / c
-                t_fin = now + rem[a] / rates
-                i_min = int(t_fin.argmin())
-                t_drain = float(t_fin[i_min])
-                drain_tid = int(a[i_min])
-            t_next = min(t_evt, t_drain)
-            dt = max(t_next - now, 0.0)
-            if dt > 0.0:
-                if a.size:
-                    rem[a] -= rates * dt
-                now = t_next
-            if drain_tid >= 0 and t_drain <= t_evt + EPS:
-                active[drain_tid] = False
-                s, d = int(cur_s[drain_tid]), int(cur_d[drain_tid])
-                out_cnt[s] -= 1
-                in_cnt[d] -= 1
-                push(now + prop_ms(drain_tid, s, d), 1, drain_tid,
-                     int(cur_hop[drain_tid]))
-                if rank is not None:
-                    r = int(rank[drain_tid])
-                    pend_out[s, r] -= 1
-                    pend_in[d, r] -= 1
-                    _advance(pend_out, min_out, s)
-                    _advance(pend_in, min_in, d)
-                    if parked:
-                        # the drain may have unblocked deferred hops; ready
-                        # ones start now, the rest re-park inside begin_hop
-                        pk, parked[:] = list(parked), []
-                        for tid2, hop2 in pk:
-                            begin_hop(now, tid2, hop2)
-                continue
-            if not events:
-                continue
-            time, _, kind, tid, hop = heapq.heappop(events)
-            now = max(now, time)
-            if kind == 0:
-                begin_hop(now, tid, hop)
-            else:  # delivered
-                if hop + 1 < len(hops[tid]):
-                    begin_hop(now, tid, hop + 1)  # store-and-forward relay
-                    continue
-                finish[tid] = now
-                for c in children[tid]:
-                    if pred[c] < 0 or finish[pred[c]] <= now:
-                        pred[c] = tid
-                    indeg[c] -= 1
-                    if indeg[c] == 0:
-                        push(now + transfers[c].compute_ms, 0, c, 0)
-
-        if parked:  # unreachable: ranks strictly increase along deps
-            raise RuntimeError(
-                f"admission deadlock: {len(parked)} hops still parked"
-            )
+        start, finish, pred = self._simulate_dag(transfers, prop_ms, rank)
         makespan = float(np.nanmax(finish)) if m else 0.0
         # critical path: backtrack from the makespan-defining transfer through
         # each transfer's latest-finishing dependency

@@ -27,6 +27,7 @@ __all__ = [
     "TPCC_MIXES",
     "TPCCConfig",
     "TPCCGenerator",
+    "DiurnalLoad",
 ]
 
 
@@ -316,3 +317,48 @@ class TPCCGenerator:
                     self.neworder_ids.add(txns[-1].txn_id)
             out[node] = txns
         return out
+
+
+class DiurnalLoad:
+    """Deterministic diurnal (time-varying) load wrapper for any generator.
+
+    Scales the per-epoch transaction count sinusoidally —
+    ``round(txns_per_node * (1 + amplitude * sin(2*pi*epoch/period_epochs
+    + phase)))``, floored at 1 — so a long-horizon streaming run replays a
+    day-night cycle: peak epochs push the WAN into backlog, trough epochs
+    let replicas pay it off.  Purely a multiplier on the wrapped
+    generator's ``epoch_txns``; key skew, read ratio and txn ids stay the
+    wrapped generator's (the abort-trajectory benchmarks lean on the
+    determinism: same seed, same trace, same cycle).
+    """
+
+    def __init__(
+        self,
+        inner,
+        *,
+        period_epochs: int,
+        amplitude: float = 0.5,
+        phase: float = 0.0,
+    ):
+        if period_epochs <= 0:
+            raise ValueError("period_epochs must be positive")
+        if not 0.0 <= amplitude < 1.0:
+            raise ValueError("amplitude must be in [0, 1)")
+        self.inner = inner
+        self.period_epochs = int(period_epochs)
+        self.amplitude = float(amplitude)
+        self.phase = float(phase)
+
+    def load_factor(self, epoch: int) -> float:
+        """The multiplier applied at ``epoch`` (1 ± amplitude)."""
+        ang = 2.0 * np.pi * epoch / self.period_epochs + self.phase
+        return 1.0 + self.amplitude * float(np.sin(ang))
+
+    def epoch_txns(
+        self,
+        epoch: int,
+        txns_per_node: int,
+        snapshot: DeltaCRDTStore | Sequence[DeltaCRDTStore] | None = None,
+    ) -> dict[int, list[Txn]]:
+        scaled = max(1, int(round(txns_per_node * self.load_factor(epoch))))
+        return self.inner.epoch_txns(epoch, scaled, snapshot=snapshot)

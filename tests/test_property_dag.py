@@ -222,3 +222,46 @@ def test_builder_dag_dependency_structure(n, k, seed):
             assert all(sched.transfers[d].dst == t.src for d in t.deps)
             assert res.start_ms[i] >= max(
                 res.finish_ms[d] for d in t.deps) - 1e-9
+
+
+@given(builder_dags(), st.integers(1, 4),
+       st.sampled_from([0.0, 5.0]), st.integers(0, 1_000))
+@settings(max_examples=40, deadline=None)
+def test_incremental_append_equals_stitched_resimulation(case, n_epochs,
+                                                         epoch_ms, seed):
+    """Appending epochs one at a time onto a StreamingTimeline yields
+    times *byte-identical* (exact float ==, no tolerance) to stitching all
+    epochs up front and running one full event simulation — the O(E)
+    soundness contract of the incremental engine (bandwidth admission
+    makes prefix times final; the lazy per-flow engine replays the same
+    float ops in the same canonical event order)."""
+    from repro.core.simulator import node_commit_ms
+    from repro.core.stream import StreamingTimeline
+
+    lat, bw, sched = case
+    n = lat.shape[0]
+    rng = np.random.default_rng(seed)
+    exec_rows = [rng.uniform(0.0, 8.0, size=n) for _ in range(n_epochs)]
+    lats = [lat * float(rng.uniform(0.8, 1.25)) for _ in range(n_epochs)]
+    for l in lats:
+        np.fill_diagonal(l, 0.0)
+
+    stitched = stitch_schedules([sched] * n_epochs,
+                                node_exec_ms=np.array(exec_rows),
+                                epoch_ms=epoch_ms, n=n)
+    full = WANSimulator(lat, bw).run(stitched, lats=lats)
+    want_commit = node_commit_ms(stitched, full, n, n_epochs)
+
+    tl = StreamingTimeline(n, bandwidth_mbps=bw, epoch_ms=epoch_ms,
+                          verify=True)
+    fins = [
+        tl.append_epoch(sched, lats[k], node_exec_ms=exec_rows[k]).finish_ms
+        for k in range(n_epochs)
+    ]
+    assert np.array_equal(np.concatenate(fins), full.finish_ms)
+    assert np.array_equal(tl.commit_ms, want_commit)
+    assert tl.finish_max_ms == [
+        float(full.finish_ms[np.array([t.epoch for t in stitched.transfers])
+                             == k].max())
+        for k in range(n_epochs)
+    ]

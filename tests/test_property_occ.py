@@ -142,3 +142,22 @@ def test_engines_commit_identical_state_by_default(n, epochs, bw, theta, seed):
     # and the read rule stays vacuous: every abort is write-write
     for rs in (ba, ev, stm):
         assert rs.read_aborts == 0
+
+
+# ---------------------------------------------------------------------------
+# vectorized / reference validation equivalence
+# ---------------------------------------------------------------------------
+
+
+@given(epoch_with_stale_variant())
+@settings(max_examples=200, deadline=None)
+def test_numpy_validation_equals_python(case):
+    """The vectorized fast path is extensionally identical to the reference
+    loop: same ValidationResult (committed + per-rule breakdown) on every
+    input, with and without a snapshot, in either mode of staleness."""
+    snap, fresh, stale = case
+    for txns in (fresh, stale):
+        for snapshot in (None, snap):
+            py = validate_epoch_detailed(txns, snapshot, mode="python")
+            vec = validate_epoch_detailed(txns, snapshot, mode="numpy")
+            assert py == vec

@@ -269,3 +269,24 @@ def test_planner_damping_limits_replans():
     # plans come from the kcenter search or the adaptive flat fallback
     methods = {e.plan_method for e in rs.epochs}
     assert methods <= {"kcenter", "kcenter+tiv", "none"}
+
+
+def test_raft_pipelined_incremental_matches_resim_oracle():
+    """pipelined_commit_ms now appends batches onto a StreamingTimeline;
+    the result must equal the O(batches²) stitch-and-rerun oracle exactly
+    (same floats, not approximately) across grouping modes, bandwidth
+    regimes, leaders and pipeline depths."""
+    n = 7
+    tr, _ = _trace(n, 2, seed=11)
+    lat = tr[0]
+    for grouping in (False, True):
+        for bw in (np.inf, 60.0):
+            rc = RaftCluster(n, grouping=grouping, tiv=grouping,
+                             bandwidth_mbps=bw)
+            for batches in (2, 4, 9):
+                for leader in (0, n // 2):
+                    inc = rc.pipelined_commit_ms(lat, leader, 64_000.0,
+                                                 batches)
+                    ref = rc._pipelined_commit_ms_resim(lat, leader,
+                                                        64_000.0, batches)
+                    assert inc == ref

@@ -140,3 +140,115 @@ def test_streaming_flag_reaches_plan_ranking():
     plan = best_plan(lat, payload_bytes=250_000.0, bandwidth_mbps=500.0,
                      streaming=True, method="kcenter")
     plan.validate(lat.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# incremental appendable timeline (stream_mode="incremental")
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_timeline_append_matches_stitch():
+    """Byte-identity contract of the O(E) incremental engine: appending
+    epochs one at a time onto a StreamingTimeline reproduces the stitched
+    full re-simulation exactly — float ``==`` on every transfer finish
+    time and on the per-node commit matrix, across builders, cadences and
+    bandwidth regimes (the deterministic pin; the hypothesis sweep lives
+    in test_property_dag.py)."""
+    from repro.core import NicState, StreamingTimeline, node_commit_ms
+    from repro.core.schedule import all_to_all_schedule, leader_schedule
+
+    lat, _ = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=6, n_clusters=2), np.random.default_rng(1)
+    )
+    plan = kcenter_grouping(lat, 2)
+    scheds = [
+        all_to_all_schedule(6, 120_000.0),
+        hierarchical_schedule(plan, 120_000.0),
+        leader_schedule(6, 2, 300_000.0),
+        hierarchical_schedule(plan, 40_000.0),
+        all_to_all_schedule(6, 500_000.0),
+    ]
+    rng = np.random.default_rng(9)
+    lats = []
+    for _ in scheds:
+        l = lat * float(rng.uniform(0.8, 1.3))
+        np.fill_diagonal(l, 0.0)
+        lats.append(l)
+    exec_rows = [rng.uniform(0.0, 4.0, size=6) for _ in scheds]
+    for bw in (np.inf, 200.0, 8.0):
+        for epoch_ms in (0.0, 25.0):
+            stitched = stitch_schedules(scheds, node_exec_ms=np.array(exec_rows),
+                                        epoch_ms=epoch_ms, n=6)
+            full = WANSimulator(lat, bw).run(stitched, lats=lats)
+            tl = StreamingTimeline(6, bandwidth_mbps=bw, epoch_ms=epoch_ms,
+                                   verify=True)
+            fins = [
+                tl.append_epoch(s, lats[k], node_exec_ms=exec_rows[k]).finish_ms
+                for k, s in enumerate(scheds)
+            ]
+            assert np.array_equal(np.concatenate(fins), full.finish_ms)
+            assert np.array_equal(
+                tl.commit_ms, node_commit_ms(stitched, full, 6, len(scheds))
+            )
+
+
+def test_incremental_engine_matches_resim_oracle():
+    """GeoCluster streaming with stream_mode='incremental' (the default)
+    is observably identical to the O(E²) stitch-and-rerun oracle — same
+    per-epoch stream commits, walls, abort breakdowns, view lags and
+    final digests, with and without the staleness feedback loop."""
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=5, n_clusters=2), np.random.default_rng(1)
+    )
+    trace = jitter_trace(lat, 8, np.random.default_rng(2))
+
+    def run(mode, feedback):
+        cfg = EngineConfig(n_nodes=5, streaming=True, epoch_ms=2.0,
+                           staleness_feedback=feedback, planner="kcenter",
+                           stream_mode=mode, modeled_cpu=True,
+                           verify_schedules=True)
+        eng = GeoCluster(cfg, bandwidth_mbps=200.0, seed=7)
+        gen = YCSBGenerator(
+            YCSBConfig(n_keys=400, theta=0.9, read_ratio=0.3),
+            5, seed=3, node_region=regions,
+        )
+        return eng.run(gen, trace, txns_per_node=8, n_epochs=8)
+
+    for feedback in (False, True):
+        inc = run("incremental", feedback)
+        ref = run("resim", feedback)
+        assert inc.state_digest == ref.state_digest
+        assert inc.value_digest == ref.value_digest
+        for a, b in zip(inc.epochs, ref.epochs):
+            assert a.stream_commit_ms == b.stream_commit_ms
+            assert a.wall_ms == b.wall_ms
+            assert a.read_aborts == b.read_aborts
+            assert a.ww_aborts == b.ww_aborts
+            assert a.view_lag_mean == b.view_lag_mean
+            assert a.view_lag_max == b.view_lag_max
+
+
+def test_timeline_rejects_unsound_modes():
+    """Incremental segment simulation is only sound where the finality
+    argument holds: event engine, bandwidth admission, deterministic
+    loss.  Each unsound switch is refused loudly."""
+    from repro.core import StreamingTimeline
+    from repro.core.schedule import all_to_all_schedule
+    from repro.core.simulator import NicState
+
+    lat = aws_latency_matrix()[:4, :4]
+    sched = all_to_all_schedule(4, 1e5)
+    rank = np.zeros(sched.n_transfers, dtype=int)
+    deps = [()] * sched.n_transfers
+    ready = [0.0] * sched.n_transfers
+    for kw, msg in (
+        (dict(barrier=True), "event engine"),
+        (dict(admission=False), "bandwidth admission"),
+        (dict(stochastic_loss=True, loss=0.01), "stochastic_loss"),
+    ):
+        sim = WANSimulator(lat, 100.0, **kw)
+        with pytest.raises(ValueError, match=msg):
+            sim.simulate_segment(sched.transfers, rank=rank, deps=deps,
+                                 ext_ready=ready, nic=NicState.zeros(4))
+    with pytest.raises(ValueError, match="stream_mode"):
+        EngineConfig(n_nodes=4, streaming=True, stream_mode="eager")
