@@ -25,17 +25,30 @@ Gates:
 * **occ-vectorized** — ``validate_epoch_detailed``'s numpy fast path beats
   the reference loop on a >=100k-txn epoch while returning an identical
   :class:`~repro.core.occ.ValidationResult`.
+* **memory** — O(E) *time* is only half the long-horizon story: with
+  ``EngineConfig(keep_epochs=False)`` + ``ServeConfig(keep_epochs=False)``
+  the epoch-sink pipeline (``repro.core.sinks``) retains no per-epoch
+  state beyond the view/retention frontiers, so doubling the horizon must
+  leave the tracemalloc peak flat — gate ``peak(2E) <= 1.1 * peak(E)``
+  (the trace itself is a fixed one-day cycle, so input memory is constant
+  too).
+* **equivalence** — the bounded-memory run's online ``RunSummary``,
+  state/value digests, ``ServeStats`` totals/latency distribution and
+  trailing ``EpochStats`` window are byte-identical to the retained
+  ``keep_epochs=True`` run of the same replay.
 """
 
 from __future__ import annotations
 
 import time
+import tracemalloc
 
 import numpy as np
 
 from repro.core import DeltaCRDTStore, Update, Version
 from repro.core.occ import Txn, validate_epoch_detailed
 from repro.core.workload import DiurnalLoad
+from repro.serve import ServeConfig
 
 from .bench_abort_curve import PLANNER
 from .bench_throughput import _run_tpcc
@@ -66,6 +79,35 @@ def _diurnal_run(epochs: int, trace, regions):
                       modeled_cpu=True, load=wrap)
     wall = time.perf_counter() - t0
     return rs, diurnal["load"], wall
+
+
+def _bounded_run(epochs: int, trace, regions, *, keep_epochs: bool,
+                 traced: bool = False):
+    """One diurnal feedback + serving replay through the epoch-sink
+    pipeline.  ``keep_epochs=False`` is the bounded-memory configuration
+    (trailing stats window, online summaries, evicting timeline/serve
+    sinks); ``keep_epochs=True`` the retained reference.  With ``traced``
+    the tracemalloc peak over the run is returned (bytes, else 0)."""
+    serve = ServeConfig(clients_per_node=1_000_000.0, max_staleness_ms=200.0,
+                        cache_keys=100, keep_epochs=keep_epochs)
+
+    def wrap(gen):
+        return DiurnalLoad(gen, period_epochs=DIURNAL_PERIOD,
+                           amplitude=DIURNAL_AMPLITUDE)
+
+    if traced:
+        tracemalloc.start()
+    try:
+        rs, _ = _run_tpcc("TPCC-A", True, trace, regions, epochs=epochs,
+                          streaming=True, staleness_feedback=True,
+                          epoch_ms=DIURNAL_EPOCH_MS, planner=PLANNER,
+                          modeled_cpu=True, serve=serve,
+                          keep_epochs=keep_epochs, load=wrap)
+        peak = tracemalloc.get_traced_memory()[1] if traced else 0
+    finally:
+        if traced:
+            tracemalloc.stop()
+    return rs, peak
 
 
 def run(quick: bool = True) -> dict:
@@ -108,6 +150,36 @@ def run(quick: bool = True) -> dict:
     peak = float(rates[settled & (lf > 1.1)].mean())
     trough = float(rates[settled & (lf < 0.9)].mean())
     ratio = t_full / t_half
+
+    # --- memory + equivalence: bounded epoch-sink pipeline ---------------
+    # a fixed one-day trace cycled by EpochLatencyCycle keeps input memory
+    # constant across horizons, so the tracemalloc peak isolates run-state
+    # retention: with keep_epochs=False it must stay flat when the horizon
+    # doubles
+    mem_trace = trace[:DIURNAL_PERIOD]
+    mem_half, peak_half = _bounded_run(horizon // 2, mem_trace, regions,
+                                       keep_epochs=False, traced=True)
+    mem_full, peak_full = _bounded_run(horizon, mem_trace, regions,
+                                       keep_epochs=False, traced=True)
+    mem_ratio = peak_full / peak_half
+    ref_rs, _ = _bounded_run(horizon // 2, mem_trace, regions,
+                             keep_epochs=True)
+    serve_eq = (
+        mem_half.serve.summary() == ref_rs.serve.summary()
+        and mem_half.serve.totals == ref_rs.serve.totals
+        and np.array_equal(mem_half.serve.latency_values_ms,
+                           ref_rs.serve.latency_values_ms)
+        and np.array_equal(mem_half.serve.latency_weights,
+                           ref_rs.serve.latency_weights)
+    )
+    window_eq = (len(mem_half.epochs) < len(ref_rs.epochs)
+                 and mem_half.epochs == ref_rs.epochs[-len(mem_half.epochs):])
+    equivalence_ok = (
+        mem_half.summary == ref_rs.summary
+        and mem_half.state_digest == ref_rs.state_digest
+        and mem_half.value_digest == ref_rs.value_digest
+        and serve_eq and window_eq
+    )
 
     # --- occ-vectorized: >=100k-txn epoch, identical result, faster ------
     # mostly-fresh reads (the common regime: only ~5% of reads versioned
@@ -158,6 +230,16 @@ def run(quick: bool = True) -> dict:
               "not ~4x (the old O(E^2) re-simulation)",
               f"{horizon // 2}ep {t_half:.1f}s -> {horizon}ep {t_full:.1f}s "
               f"({ratio:.2f}x)"),
+        check(mem_ratio <= 1.1,
+              "memory: keep_epochs=False holds the tracemalloc peak flat "
+              "when the horizon doubles (frontier-bounded retention)",
+              f"{horizon // 2}ep {peak_half / 1e6:.1f}MB -> {horizon}ep "
+              f"{peak_full / 1e6:.1f}MB ({mem_ratio:.3f}x)"),
+        check(equivalence_ok,
+              "equivalence: bounded run's online summary, digests, serve "
+              "totals/latency distribution and trailing epoch window are "
+              "byte-identical to the retained run",
+              f"{horizon // 2} epochs, window {len(mem_half.epochs)}"),
         check(res_py == res_np,
               "occ-vectorized: numpy fast path returns an identical "
               "ValidationResult at 100k txns",
@@ -181,6 +263,13 @@ def run(quick: bool = True) -> dict:
         "scaling": {"epochs": [horizon // 2, horizon],
                     "wall_s": [round(t_half, 2), round(t_full, 2)],
                     "ratio": round(ratio, 3)},
+        "memory": {"epochs": [horizon // 2, horizon],
+                   "peak_mb": [round(peak_half / 1e6, 2),
+                               round(peak_full / 1e6, 2)],
+                   "ratio": round(mem_ratio, 3)},
+        "equivalence": {"epochs": horizon // 2,
+                        "window": len(mem_half.epochs),
+                        "ok": equivalence_ok},
         "occ": {"n_txns": n_txns, "n_keys": n_keys,
                 "python_s": round(t_py, 3), "numpy_s": round(t_np, 3),
                 "speedup": round(speedup, 2)},

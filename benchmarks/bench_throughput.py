@@ -28,7 +28,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
               epoch_ms: float = 10.0, planner: str = "milp",
               modeled_cpu: bool = False, serve=None, txns_per_node: int = 40,
               verify_schedules: bool = False, stream_mode: str = "incremental",
-              load=None):
+              keep_epochs: bool = True, stats_window: int = 64, load=None):
     """Paper regime: Alibaba-cloud 5-node testbed, WAN bandwidth in the
     Fig. 3 constrained band (~15 Mbps to HK), 100 warehouses with hot item
     contention "to stress inter-node coordination" (Sec 6.3)."""
@@ -43,6 +43,7 @@ def _run_tpcc(mix: str, grouping: bool, trace, regions, *, epochs: int, seed=3,
         staleness_feedback=staleness_feedback,
         modeled_cpu=modeled_cpu, serve=serve,
         verify_schedules=verify_schedules, stream_mode=stream_mode,
+        keep_epochs=keep_epochs, stats_window=stats_window,
     )
     wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
     eng = GeoCluster(

@@ -161,6 +161,22 @@ RULES: list[ConfigRule] = [
         ),
     ),
     ConfigRule(
+        "stats-window-nonnegative", "EngineConfig", "range", "config",
+        lambda cfg: "stats_window must be >= 0"
+        if cfg.stats_window < 0 else None,
+    ),
+    ConfigRule(
+        "bounded-run-serve-retention", "EngineConfig", "requires", "config",
+        lambda cfg: (
+            "keep_epochs=False requires ServeConfig(keep_epochs=False): a "
+            "bounded-memory run cannot retain the serving plane's full "
+            "per-epoch list (run totals and latency percentiles are "
+            "unaffected — they come from the online ServeTotals)"
+            if (not cfg.keep_epochs and cfg.serve is not None
+                and cfg.serve.keep_epochs) else None
+        ),
+    ),
+    ConfigRule(
         "grouped-schedule-contract", "EngineConfig", "contract", "cluster",
         _grouped_schedule_contract,
     ),

@@ -63,7 +63,15 @@ from .schedule import (
     messages_per_node,
     stitch_schedules,
 )
-from .simulator import NicState, RoundResult, WANSimulator, node_commit_ms
+from .simulator import (
+    EpochLatencyCycle,
+    NicState,
+    RoundResult,
+    WANSimulator,
+    epoch_commit_row,
+    node_commit_ms,
+)
+from .sinks import EpochContext, EpochSink, RunAggregator, RunSummary
 from .stream import EpochTimings, StreamingTimeline
 from .whitedata import (
     FilterResult,

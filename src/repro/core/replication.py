@@ -78,7 +78,8 @@ from .schedule import (
     leader_schedule,
     stitch_schedules,
 )
-from .simulator import WANSimulator, node_commit_ms
+from .simulator import EpochLatencyCycle, WANSimulator, node_commit_ms
+from .sinks import EpochContext, EpochSink, RunAggregator, RunSummary
 from .stream import StreamingTimeline
 from .whitedata import FilterResult, FilterStats, filter_group_batch
 
@@ -143,6 +144,16 @@ class EngineConfig:
     # "resim" keeps the O(E²) stitch-everything-and-rerun oracle
     # (repro.core.stream documents the identity argument; tests pin it).
     stream_mode: str = "incremental"
+    # run-dataflow retention: keep_epochs=True (default) retains the full
+    # per-epoch EpochStats list on RunStats.epochs (the historical surface);
+    # keep_epochs=False caps RunStats.epochs at the trailing `stats_window`
+    # epochs and the run-level totals come from the online RunSummary
+    # instead (repro.core.sinks.RunAggregator) — byte-identical to the
+    # retained path, memory O(window) instead of O(E).  A bounded run with
+    # a serving plane needs ServeConfig(keep_epochs=False) too (rule table:
+    # repro.analysis.config_check).
+    keep_epochs: bool = True
+    stats_window: int = 64
     # debug hook: statically verify every schedule the engine simulates
     # (repro.analysis.schedule_check.verify_schedule — acyclicity, phase
     # monotonicity along deps, clock-chain linearity, payload/node sanity)
@@ -269,6 +280,18 @@ class EpochStats:
 
 @dataclasses.dataclass
 class RunStats:
+    """A run's report.  ``epochs`` is the retained per-epoch list — the full
+    run under ``EngineConfig(keep_epochs=True)`` (the default), only the
+    trailing ``stats_window`` under ``keep_epochs=False``.  The run-level
+    totals below read ``summary`` (the :class:`~repro.core.sinks.RunSummary`
+    the engine accumulated online, byte-identical to folding the full epochs
+    list) when present and fall back to folding ``epochs`` when constructed
+    directly without one.  ``makespans_ms`` / ``p99_sync_ms`` are inherently
+    per-epoch arrays and always read ``epochs`` — under ``keep_epochs=False``
+    they describe the retained window only (``summary.sync_ms_mean`` /
+    ``.sync_ms_std`` / ``.sync_ms_max`` are the bounded-memory stand-ins).
+    """
+
     epochs: list[EpochStats]
     msg_matrix: np.ndarray
     plan_time_s: float
@@ -277,27 +300,40 @@ class RunStats:
     # the serving plane's report (EngineConfig(serve=...), streaming only);
     # None when the plane is off
     serve: ServeStats | None = None
+    # online run-level totals (repro.core.sinks.RunSummary), set by
+    # GeoCluster.run; None for hand-constructed instances
+    summary: "RunSummary | None" = None
 
     @property
     def committed(self) -> int:
+        if self.summary is not None:
+            return self.summary.committed
         return sum(e.committed for e in self.epochs)
 
     @property
     def total_txns(self) -> int:
+        if self.summary is not None:
+            return self.summary.n_txns
         return sum(e.n_txns for e in self.epochs)
 
     @property
     def aborted(self) -> int:
+        if self.summary is not None:
+            return self.summary.aborted
         return sum(e.aborted for e in self.epochs)
 
     @property
     def read_aborts(self) -> int:
         """Transactions failing read-set validation (stale read versions)."""
+        if self.summary is not None:
+            return self.summary.read_aborts
         return sum(e.read_aborts for e in self.epochs)
 
     @property
     def ww_aborts(self) -> int:
         """Transactions losing a written key first-writer-wins."""
+        if self.summary is not None:
+            return self.summary.ww_aborts
         return sum(e.ww_aborts for e in self.epochs)
 
     @property
@@ -312,6 +348,8 @@ class RunStats:
 
     @property
     def wall_s(self) -> float:
+        if self.summary is not None:
+            return self.summary.wall_ms / 1e3
         return sum(e.wall_ms for e in self.epochs) / 1e3
 
     @property
@@ -321,14 +359,20 @@ class RunStats:
 
     @property
     def wan_bytes(self) -> float:
+        if self.summary is not None:
+            return self.summary.wan_bytes
         return sum(e.wan_bytes for e in self.epochs)
 
     @property
     def makespans_ms(self) -> np.ndarray:
+        """Per-epoch DAG critical paths — of the *retained* epochs only
+        (the trailing window under ``keep_epochs=False``)."""
         return np.array([e.sync_ms for e in self.epochs], dtype=float)
 
     @property
     def white_stats(self) -> FilterStats:
+        if self.summary is not None:
+            return self.summary.filter_stats
         out = FilterStats()
         for e in self.epochs:
             if e.filter_stats is not None:
@@ -337,6 +381,9 @@ class RunStats:
 
     @property
     def p99_sync_ms(self) -> float:
+        """p99 of :attr:`makespans_ms` — window-limited under
+        ``keep_epochs=False``; use ``summary.sync_ms_max`` for a bounded-
+        memory whole-run bound."""
         ms = self.makespans_ms
         if ms.size == 0:
             return 0.0
@@ -345,23 +392,30 @@ class RunStats:
     @property
     def overlap_ms(self) -> float:
         """Total CPU/WAN work hidden by the pipelined transmission DAG."""
+        if self.summary is not None:
+            return self.summary.sync_overlap_ms
         return sum(e.sync_overlap_ms for e in self.epochs)
 
     @property
     def pipeline_overlap_ms(self) -> float:
         """Total wall-clock the streaming cross-epoch pipeline saved vs the
         ``max(epoch, exec, sync)`` formula (0.0 for non-streaming runs)."""
+        if self.summary is not None:
+            return self.summary.pipeline_overlap_ms
         return sum(e.pipeline_overlap_ms for e in self.epochs)
 
 
 @dataclasses.dataclass
 class _EpochRound:
     """The timing-independent product of one epoch: the schedule to time,
-    the commit outcome, and the planning/filtering context the stats need."""
+    the commit outcome, and the planning/filtering context the stats need.
+    (The epoch's latency matrix is *not* here — it is always
+    ``trace[epoch % len(trace)]``, and retaining a copy per round held E
+    duplicated matrices alive; see :class:`~repro.core.simulator.
+    EpochLatencyCycle`.)"""
 
     epoch: int
     schedule: TransmissionSchedule
-    lat: np.ndarray
     n_txns: int
     committed: int
     aborted: int
@@ -676,7 +730,6 @@ class GeoCluster:
         return _EpochRound(
             epoch=epoch,
             schedule=schedule,
-            lat=np.asarray(lat, dtype=float),
             n_txns=n_txns,
             committed=committed,
             aborted=pre_aborted + len(vres.aborted),
@@ -792,31 +845,38 @@ class GeoCluster:
         txns_per_node: int = 20,
         n_epochs: int | None = None,
     ) -> RunStats:
+        cfg = self.cfg
         n_epochs = n_epochs if n_epochs is not None else len(trace)
+        # every run path pushes its finalized EpochStats through the
+        # aggregator sink the moment the epoch's numbers are final; the
+        # retained list and the online summary both come from it
+        agg = RunAggregator(keep_epochs=cfg.keep_epochs,
+                            window=cfg.stats_window)
         serve_stats = None
-        if self.cfg.streaming:
-            epochs, serve_stats = self._run_streaming(
-                generator, trace, txns_per_node, n_epochs
+        if cfg.streaming:
+            serve_stats = self._run_streaming(
+                generator, trace, txns_per_node, n_epochs, agg
             )
         else:
-            epochs = []
             for e in range(n_epochs):
                 lat = trace[e % len(trace)]
                 txns = generator.epoch_txns(e, txns_per_node, snapshot=self.store)
-                epochs.append(self.run_epoch(e, txns, lat))
+                agg.on_epoch(self.run_epoch(e, txns, lat))
         return RunStats(
-            epochs=epochs,
+            epochs=agg.epochs,
             msg_matrix=self.msg_matrix.copy(),
             plan_time_s=self.plan_time_s,
             state_digest=self.store.digest(),
             value_digest=self.store.digest(values_only=True),
             serve=serve_stats,
+            summary=agg.summary,
         )
 
-    def _stream_prefix(self, rounds: list["_EpochRound"]):
+    def _stream_prefix(self, rounds: list["_EpochRound"], lats):
         """Stitch the epochs prepared so far and run the streaming event
-        simulation over them.  Returns (per-node commit-time matrix,
-        stream RoundResult, stitched schedule).
+        simulation over them.  ``lats`` indexes each epoch's latency matrix
+        (an :class:`~repro.core.simulator.EpochLatencyCycle`).  Returns
+        (per-node commit-time matrix, stream RoundResult, stitched schedule).
 
         This is the O(E²) reference oracle (``stream_mode="resim"``): with
         feedback it re-simulates the whole prefix every epoch.  The default
@@ -830,10 +890,10 @@ class GeoCluster:
             epoch_ms=cfg.epoch_ms,
             n=cfg.n_nodes,
         )
-        stream_sim = WANSimulator(rounds[0].lat, self.bandwidth,
+        stream_sim = WANSimulator(lats[0], self.bandwidth,
                                   loss=self.loss, rng=self.rng,
                                   verify=cfg.verify_schedules)
-        stream = stream_sim.run(stitched, lats=[r.lat for r in rounds])
+        stream = stream_sim.run(stitched, lats=lats)
         commits = node_commit_ms(stitched, stream, cfg.n_nodes, len(rounds))
         return commits, stream, stitched
 
@@ -841,25 +901,37 @@ class GeoCluster:
         self,
         views: list[DeltaCRDTStore],
         view_next: np.ndarray,
-        rounds: list["_EpochRound"],
-        commit_ms: np.ndarray,
+        pending_ups: dict[int, list[Update]],
+        commit_at: Callable[[int, int], float],
+        n_done: int,
         now_ms: float,
     ) -> None:
         """Merge every epoch the stitched simulation has delivered to each
         node by ``now_ms`` into that node's snapshot view.  Views advance a
         contiguous epoch prefix (a node merges epoch k only once its k-th
         inbound transfers have all delivered — the same per-node commit
-        dependency ``stitch_schedules`` gates sends on)."""
+        dependency ``stitch_schedules`` gates sends on).
+
+        ``commit_at(k, i)`` reads the measured commit time of epoch ``k`` at
+        node ``i`` for ``k < n_done`` (a point read so the caller may store
+        the matrix in an evicting window); ``pending_ups`` maps epoch ->
+        committed updates and is the *retention frontier's* backing store —
+        entries every view has merged past (``< view_next.min()``) are
+        released here, because no view will ever request them again."""
         for i in range(self.cfg.n_nodes):
             nxt = int(view_next[i])
-            while nxt < commit_ms.shape[0] and commit_ms[nxt, i] <= now_ms + 1e-9:
-                views[i].apply_many(rounds[nxt].ups)
+            while nxt < n_done and commit_at(nxt, i) <= now_ms + 1e-9:
+                views[i].apply_many(pending_ups[nxt])
                 nxt += 1
             view_next[i] = nxt
+        floor = int(view_next.min()) if len(view_next) else 0
+        for k in [k for k in pending_ups if k < floor]:
+            del pending_ups[k]
 
     def _run_streaming(
-        self, generator, trace, txns_per_node: int, n_epochs: int
-    ) -> tuple[list[EpochStats], ServeStats | None]:
+        self, generator, trace, txns_per_node: int, n_epochs: int,
+        agg: RunAggregator,
+    ) -> ServeStats | None:
         """Cross-epoch streaming: stitch every epoch's DAG and measure real
         per-epoch commit times from one event-driven simulation.
 
@@ -883,39 +955,149 @@ class GeoCluster:
         becomes a function of network conditions.  (Write-set *sends*
         remain gated on the node's previous-epoch commit, as in the
         stitched timing DAG: execution is optimistic, transmission stays
-        ordered.)  The stream is timed incrementally by default
+        ordered.)
+
+        The stream is timed incrementally by default
         (``stream_mode="incremental"``): each epoch appends onto a
         :class:`~repro.core.stream.StreamingTimeline` that simulates only
         the new events — with bandwidth admission an earlier epoch's
         measured times are unaffected by later arrivals, so the prefix
         times are final and the incremental timings are byte-identical to
         re-simulating the whole prefix (``stream_mode="resim"``, the O(E²)
-        reference oracle).
+        reference oracle).  That same finality is what makes the
+        incremental path a *bounded-memory pipeline*: each epoch's
+        ``EpochStats`` is assembled eagerly and pushed through the attached
+        :class:`~repro.core.sinks.EpochSink`\\ s (the run aggregator, the
+        serving plane's :class:`~repro.serve.plane.ServingSink`), per-round
+        simulators and results are dropped on the spot, committed updates
+        are retained only until the slowest view merges past them
+        (``view_next.min()``), and the timeline's commit window is evicted
+        at the same frontier.  The resim oracle necessarily retains the
+        full prefix (it re-simulates it) and keeps the historical batch
+        shape.
         """
+        if self.cfg.stream_mode == "incremental":
+            return self._run_streaming_incremental(
+                generator, trace, txns_per_node, n_epochs, agg
+            )
+        return self._run_streaming_resim(
+            generator, trace, txns_per_node, n_epochs, agg
+        )
+
+    def _run_streaming_incremental(
+        self, generator, trace, txns_per_node: int, n_epochs: int,
+        agg: RunAggregator,
+    ) -> ServeStats | None:
+        """The O(E)-time, frontier-bounded-memory streaming path (see
+        :meth:`_run_streaming`)."""
         cfg = self.cfg
         feedback = cfg.staleness_feedback
-        incremental = cfg.stream_mode == "incremental"
+        lat_cycle = EpochLatencyCycle(trace, max(n_epochs, 1))
+        timeline = StreamingTimeline(
+            cfg.n_nodes, bandwidth_mbps=self.bandwidth, loss=self.loss,
+            epoch_ms=cfg.epoch_ms, verify=cfg.verify_schedules,
+        )
+        serve_sink = None
+        sinks: list[EpochSink] = [agg]
+        if cfg.serve is not None:
+            from ..serve.plane import ServingSink
+
+            serve_sink = ServingSink(cfg.serve, cfg.n_nodes, cfg.epoch_ms)
+            sinks.append(serve_sink)
+        views = view_next = None
+        # committed updates awaiting view merges, epoch -> updates; entries
+        # are released once every view's frontier passes them
+        pending_ups: dict[int, list[Update]] = {}
+        if feedback:
+            views = [DeltaCRDTStore(i) for i in range(cfg.n_nodes)]
+            view_next = np.zeros(cfg.n_nodes, dtype=int)
+        prev_commit = 0.0
+        for e in range(n_epochs):
+            lat = lat_cycle[e]
+            if feedback:
+                self._advance_views(views, view_next, pending_ups,
+                                    timeline.commit_at, timeline.n_epochs,
+                                    e * cfg.epoch_ms)
+                lag = e - view_next
+                lag_mean = float(lag.mean()) if lag.size else 0.0
+                lag_max = int(lag.max()) if lag.size else 0
+                snapshot = views
+            else:
+                lag_mean, lag_max = 0.0, 0
+                snapshot = self.store
+            txns = generator.epoch_txns(e, txns_per_node, snapshot=snapshot)
+            rnd = self._prepare_epoch(e, txns, lat, views=views)
+            sim = WANSimulator(lat, self.bandwidth, loss=self.loss,
+                               rng=self.rng, verify=cfg.verify_schedules)
+            res = sim.run(rnd.schedule)
+            self.msg_matrix += res.msg_matrix
+            # O(this epoch's events): the timeline carries the stream
+            # frontier; by the admission theorem this epoch's times are
+            # final the moment the append returns, so the stats can be
+            # extracted and pushed downstream immediately
+            et = timeline.append_epoch(rnd.schedule, lat,
+                                       node_exec_ms=rnd.node_exec_ms)
+            commit = et.finish_max_ms
+            wall = commit - prev_commit
+            prev_commit = commit
+            formula = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
+            stats = self._epoch_stats(
+                rnd, sim, res,
+                wall_ms=wall,
+                pipeline_overlap_ms=formula - wall,
+                stream_commit_ms=commit,
+                view_lag_mean=lag_mean,
+                view_lag_max=lag_max,
+            )
+            ctx = EpochContext(epoch=e, commit_row=et.commit_ms, lat=lat)
+            for s in sinks:
+                s.on_epoch(stats, ctx)
+            if feedback:
+                pending_ups[e] = rnd.ups
+                # commit rows below the slowest view's merge frontier can
+                # never be read again (_advance_views only reads forward of
+                # view_next); drop them from the timeline's window
+                timeline.evict_commit_rows(int(view_next.min()))
+            else:
+                # no feedback loop: nothing ever reads the commit window
+                # (the serving sink already consumed this epoch's row)
+                timeline.evict_commit_rows(timeline.n_epochs)
+        if serve_sink is None or n_epochs == 0:
+            return None
+        # wall_ms covers the full client window even when the last commit
+        # lands inside it
+        return serve_sink.finish(
+            wall_ms=max(prev_commit, n_epochs * cfg.epoch_ms)
+        )
+
+    def _run_streaming_resim(
+        self, generator, trace, txns_per_node: int, n_epochs: int,
+        agg: RunAggregator,
+    ) -> ServeStats | None:
+        """The O(E²) re-simulation oracle (see :meth:`_run_streaming`) —
+        necessarily batch-shaped: it retains every round to re-stitch the
+        whole prefix, and replays the final commit matrix through the
+        serving plane at the end."""
+        cfg = self.cfg
+        feedback = cfg.staleness_feedback
+        lat_cycle = EpochLatencyCycle(trace, max(n_epochs, 1))
         rounds: list[_EpochRound] = []
         sims: list[WANSimulator] = []
         results = []
         lags: list[tuple[float, int]] = []
-        views = view_next = commit_ms = None
+        views = view_next = None
+        pending_ups: dict[int, list[Update]] = {}
+        commit_ms = np.zeros((0, cfg.n_nodes))
         stream = stitched = None
-        timeline = None
-        if incremental:
-            timeline = StreamingTimeline(
-                cfg.n_nodes, bandwidth_mbps=self.bandwidth, loss=self.loss,
-                epoch_ms=cfg.epoch_ms, verify=cfg.verify_schedules,
-            )
         if feedback:
             views = [DeltaCRDTStore(i) for i in range(cfg.n_nodes)]
             view_next = np.zeros(cfg.n_nodes, dtype=int)
-            commit_ms = np.zeros((0, cfg.n_nodes))
         for e in range(n_epochs):
-            lat = trace[e % len(trace)]
+            lat = lat_cycle[e]
             if feedback:
-                self._advance_views(views, view_next, rounds, commit_ms,
-                                    e * cfg.epoch_ms)
+                self._advance_views(views, view_next, pending_ups,
+                                    lambda k, i, _c=commit_ms: float(_c[k, i]),
+                                    commit_ms.shape[0], e * cfg.epoch_ms)
                 lag = e - view_next
                 lags.append((float(lag.mean()) if lag.size else 0.0,
                              int(lag.max()) if lag.size else 0))
@@ -931,33 +1113,26 @@ class GeoCluster:
             rounds.append(rnd)
             sims.append(sim)
             results.append(res)
-            if incremental:
-                # O(this epoch's events): the timeline carries the stream
-                # frontier, so the commit matrix is always current
-                timeline.append_epoch(rnd.schedule, lat,
-                                      node_exec_ms=rnd.node_exec_ms)
-                if feedback:
-                    commit_ms = timeline.commit_ms
-            elif feedback:
+            if feedback:
+                pending_ups[e] = rnd.ups
                 # measured staleness for the *next* epoch's views; the last
                 # iteration's prefix is the full stream the stats consume
-                commit_ms, stream, stitched = self._stream_prefix(rounds)
+                commit_ms, stream, stitched = self._stream_prefix(
+                    rounds, lat_cycle
+                )
         if not rounds:
-            return [], None
+            return None
 
-        if incremental:
-            commit_ms = timeline.commit_ms
-            commit_marks = np.asarray(timeline.finish_max_ms)
-        else:
-            if stream is None:
-                commit_ms, stream, stitched = self._stream_prefix(rounds)
-            # per-epoch absolute commit marks in one grouped pass (the old
-            # per-epoch `finish_ms[epoch_of == k].max()` scan was quadratic)
-            epoch_of = np.array([t.epoch for t in stitched.transfers])
-            commit_marks = np.full(len(rounds), -np.inf)
-            np.maximum.at(commit_marks, epoch_of, stream.finish_ms)
+        if stream is None:
+            commit_ms, stream, stitched = self._stream_prefix(
+                rounds, lat_cycle
+            )
+        # per-epoch absolute commit marks in one grouped pass (the old
+        # per-epoch `finish_ms[epoch_of == k].max()` scan was quadratic)
+        epoch_of = np.array([t.epoch for t in stitched.transfers])
+        commit_marks = np.full(len(rounds), -np.inf)
+        np.maximum.at(commit_marks, epoch_of, stream.finish_ms)
 
-        epochs: list[EpochStats] = []
         prev_commit = 0.0
         for k, (rnd, sim, res) in enumerate(zip(rounds, sims, results)):
             commit = float(commit_marks[k])
@@ -965,14 +1140,18 @@ class GeoCluster:
             prev_commit = commit
             formula = max(cfg.epoch_ms, rnd.exec_ms, res.makespan_ms)
             lag_mean, lag_max = lags[k] if feedback else (0.0, 0)
-            epochs.append(self._epoch_stats(
-                rnd, sim, res,
-                wall_ms=wall,
-                pipeline_overlap_ms=formula - wall,
-                stream_commit_ms=commit,
-                view_lag_mean=lag_mean,
-                view_lag_max=lag_max,
-            ))
+            agg.on_epoch(
+                self._epoch_stats(
+                    rnd, sim, res,
+                    wall_ms=wall,
+                    pipeline_overlap_ms=formula - wall,
+                    stream_commit_ms=commit,
+                    view_lag_mean=lag_mean,
+                    view_lag_max=lag_max,
+                ),
+                EpochContext(epoch=k, commit_row=commit_ms[k],
+                             lat=lat_cycle[k]),
+            )
 
         serve_stats = None
         if cfg.serve is not None:
@@ -986,11 +1165,11 @@ class GeoCluster:
             serve_stats = simulate_serving(
                 cfg.serve,
                 commit_ms,
-                [r.lat for r in rounds],
+                lat_cycle,
                 cfg.epoch_ms,
                 wall_ms=max(prev_commit, n_epochs * cfg.epoch_ms),
             )
-        return epochs, serve_stats
+        return serve_stats
 
 
 # ---------------------------------------------------------------------------

@@ -91,7 +91,43 @@ import numpy as np
 
 from .schedule import Transfer, TransmissionSchedule
 
-__all__ = ["WANSimulator", "RoundResult", "NicState", "node_commit_ms"]
+__all__ = [
+    "EpochLatencyCycle",
+    "NicState",
+    "RoundResult",
+    "WANSimulator",
+    "epoch_commit_row",
+    "node_commit_ms",
+]
+
+
+class EpochLatencyCycle:
+    """Per-epoch latency matrices as a cyclic view over a trace.
+
+    The replication engine's epoch ``e`` always uses ``trace[e % len(trace)]``,
+    so a run's per-epoch latency "stack" is fully determined by the trace
+    plus the horizon — materializing ``[trace[e % p] for e in range(E)]``
+    (E full matrices) is pure duplication.  This sequence indexes the trace
+    lazily instead; ``len()`` is the horizon, ``[k]`` the epoch's matrix.
+    Consumers that index with ``lats[min(e, len(lats) - 1)]`` (the event
+    engine, the serve plane) see exactly the matrices the materialized
+    list held.
+    """
+
+    def __init__(self, trace: Sequence[np.ndarray], n_epochs: int):
+        self._stack = [np.asarray(l, dtype=float) for l in trace]
+        if not self._stack:
+            raise ValueError("EpochLatencyCycle requires a non-empty trace")
+        self._n = int(n_epochs)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, k: int) -> np.ndarray:
+        k = int(k)
+        if k < 0 or k >= self._n:
+            raise IndexError(f"epoch {k} out of range [0, {self._n})")
+        return self._stack[k % len(self._stack)]
 
 
 @dataclasses.dataclass
@@ -138,11 +174,36 @@ class RoundResult:
         return self.makespan_ms
 
 
+def epoch_commit_row(
+    transfers: Sequence[Transfer],
+    finish_ms: np.ndarray,
+    n: int,
+) -> np.ndarray:
+    """One epoch's *raw* per-node commit row: per node, the max delivery
+    over the transfers it owns (``src`` for local compute stages, ``dst``
+    for wire hops; cadence ``clock`` stages are unowned).  ``-inf`` marks a
+    node silent in the epoch — callers fold rows with a cumulative max and
+    map residual ``-inf`` to 0 (see :func:`node_commit_ms`).
+    """
+    row = np.full(n, -np.inf)
+    for i, t in enumerate(transfers):
+        if t.tag == "clock":
+            continue  # cadence stage: not owned by a real node
+        node = t.src if t.src == t.dst else t.dst
+        f = float(finish_ms[i])
+        if f > row[node]:
+            row[node] = f
+    return row
+
+
 def node_commit_ms(
     schedule: TransmissionSchedule,
     result: RoundResult,
     n: int,
     n_epochs: int | None = None,
+    *,
+    start_epoch: int = 0,
+    base_row: np.ndarray | None = None,
 ) -> np.ndarray:
     """Per-node, per-epoch commit times of a simulated (stitched) schedule.
 
@@ -155,17 +216,27 @@ def node_commit_ms(
     to wait for).  This is the measured staleness signal the
     ``staleness_feedback`` OCC loop consumes: node ``i``'s snapshot view
     may advance to epoch ``k`` only at ``out[k, i]``.
+
+    The windowed form computes only rows ``[start_epoch, n_epochs)``:
+    ``base_row`` must then be the cumulative commit row of epoch
+    ``start_epoch - 1`` (it seeds the running max, so the window is exactly
+    the corresponding slice of the full matrix).  Omitting ``base_row``
+    with ``start_epoch > 0`` drops the earlier epochs' history and is only
+    meaningful when no node was silent across the whole window.
     """
     if n_epochs is None:
         n_epochs = max((t.epoch for t in schedule.transfers), default=-1) + 1
-    out = np.full((max(n_epochs, 0), n), -np.inf)
+    rows = max(n_epochs - start_epoch, 0)
+    out = np.full((rows, n), -np.inf)
     for idx, t in enumerate(schedule.transfers):
-        if t.tag == "clock":
-            continue  # cadence stage: not owned by a real node
+        if t.tag == "clock" or t.epoch < start_epoch or t.epoch >= n_epochs:
+            continue  # cadence stage / outside the requested window
         node = t.src if t.src == t.dst else t.dst
         f = float(result.finish_ms[idx])
-        if f > out[t.epoch, node]:
-            out[t.epoch, node] = f
+        if f > out[t.epoch - start_epoch, node]:
+            out[t.epoch - start_epoch, node] = f
+    if base_row is not None and rows:
+        np.maximum(out[0], np.asarray(base_row, dtype=float), out=out[0])
     # a node silent in epoch k committed it the moment it committed k-1
     out = np.maximum.accumulate(out, axis=0)
     out[~np.isfinite(out)] = 0.0
@@ -677,9 +748,15 @@ class WANSimulator:
                 n_transfers=0, start_ms=np.zeros(0), finish_ms=np.zeros(0),
             )
 
-        stack = None
+        stack: Sequence[np.ndarray] | None = None
         if lats is not None:
-            stack = [np.asarray(l, dtype=float) for l in lats]
+            # an EpochLatencyCycle already indexes lazily — wrapping it in a
+            # list would materialize the E duplicated matrices it exists to
+            # avoid
+            if isinstance(lats, EpochLatencyCycle):
+                stack = lats
+            else:
+                stack = [np.asarray(l, dtype=float) for l in lats]
 
         def prop_ms(tid: int, s: int, d: int) -> float:
             if s == d:

@@ -55,7 +55,7 @@ from typing import Sequence
 import numpy as np
 
 from .schedule import StitchState, Transfer, TransmissionSchedule
-from .simulator import NicState, WANSimulator
+from .simulator import NicState, WANSimulator, epoch_commit_row
 
 __all__ = ["StreamingTimeline", "EpochTimings"]
 
@@ -85,9 +85,16 @@ class StreamingTimeline:
     """Appendable cross-epoch event simulation (see module docstring).
 
     ``append_epoch(schedule, lat, node_exec_ms)`` stitches the epoch onto
-    the stream frontier and simulates only its events; memory stays
-    O(segment) + O(E·n): delivered-transfer state is evicted down to the
-    dependency frontier after every append.
+    the stream frontier and simulates only its events; delivered-transfer
+    state is evicted down to the dependency frontier after every append.
+    The cumulative commit matrix and per-epoch finish marks live in a
+    sliding-window buffer: callers that only need recent rows (the
+    staleness-feedback loop needs nothing below the slowest view's merge
+    frontier, ``view_next.min()``) release older ones with
+    :meth:`evict_commit_rows`, keeping memory O(segment + live window · n)
+    instead of O(E·n).  With no eviction the full matrix is retained and
+    :attr:`commit_ms` / :attr:`finish_max_ms` are exactly the historical
+    surfaces.
     """
 
     def __init__(
@@ -123,10 +130,16 @@ class StreamingTimeline:
             from ..analysis.schedule_check import StreamScheduleVerifier
 
             self._verifier = StreamScheduleVerifier(n_nodes=n)
-        # cumulative per-node commit matrix, doubling capacity
+        # cumulative per-node commit matrix + per-epoch finish marks, stored
+        # as a sliding window: physical row 0 is absolute epoch _phys_base,
+        # rows below the _evicted frontier are dead and reclaimed by
+        # _ensure_capacity (compact-or-grow), so retained capacity is
+        # O(live window) rather than O(E)
         self._commit = np.zeros((8, n))
+        self._fmax = np.zeros(8)
         self._acc = np.full(n, -np.inf)
-        self._finish_max: list[float] = []
+        self._phys_base = 0   # absolute epoch of physical row 0
+        self._evicted = 0     # retention frontier: rows < _evicted are gone
 
     # -- read surface --------------------------------------------------------
 
@@ -135,16 +148,89 @@ class StreamingTimeline:
         return self._stitch.epoch
 
     @property
+    def evicted_epochs(self) -> int:
+        """Epochs whose commit rows have been released; reads below this
+        frontier raise.  0 until :meth:`evict_commit_rows` is first used."""
+        return self._evicted
+
+    @property
     def commit_ms(self) -> np.ndarray:
-        """The ``(n_epochs, n)`` cumulative per-node commit matrix — the
-        same array ``node_commit_ms(stitched, full_run, n)`` yields."""
-        return self._commit[: self._stitch.epoch]
+        """The retained ``(n_epochs - evicted_epochs, n)`` cumulative
+        per-node commit window — with no eviction, the same full matrix
+        ``node_commit_ms(stitched, full_run, n)`` yields; row 0 is absolute
+        epoch :attr:`evicted_epochs`."""
+        lo = self._evicted - self._phys_base
+        return self._commit[lo: self._stitch.epoch - self._phys_base]
 
     @property
     def finish_max_ms(self) -> list[float]:
-        """Per epoch: the last delivery among that epoch's transfers (the
-        absolute stream commit the stats loop consumes)."""
-        return list(self._finish_max)
+        """Per retained epoch: the last delivery among that epoch's
+        transfers (the absolute stream commit the stats loop consumes)."""
+        lo = self._evicted - self._phys_base
+        return self._fmax[lo: self._stitch.epoch - self._phys_base].tolist()
+
+    def commit_at(self, epoch: int, node: int) -> float:
+        """``commit_ms[epoch, node]`` by absolute epoch index (the feedback
+        loop's point read — window-relocation-proof)."""
+        if epoch < self._evicted:
+            raise IndexError(
+                f"commit row for epoch {epoch} was evicted "
+                f"(frontier at {self._evicted})"
+            )
+        if epoch >= self._stitch.epoch:
+            raise IndexError(
+                f"epoch {epoch} not yet appended ({self._stitch.epoch} so far)"
+            )
+        return float(self._commit[epoch - self._phys_base, node])
+
+    def commit_row(self, epoch: int) -> np.ndarray:
+        """A copy of the cumulative commit row of an absolute epoch."""
+        if epoch < self._evicted or epoch >= self._stitch.epoch:
+            raise IndexError(
+                f"epoch {epoch} outside retained window "
+                f"[{self._evicted}, {self._stitch.epoch})"
+            )
+        return self._commit[epoch - self._phys_base].copy()
+
+    # -- retention -----------------------------------------------------------
+
+    def evict_commit_rows(self, before: int) -> None:
+        """Release commit rows of epochs ``< before`` (monotone; clamped to
+        the appended horizon).  Sound for the feedback loop once every
+        node's view has merged past them: ``_advance_views`` only ever
+        reads rows ``>= view_next.min()``, and an epoch's row is final the
+        moment it is appended (the admission theorem), so nothing will
+        update or reread a released row.  The memory is reclaimed lazily by
+        the next capacity request (compact-or-grow)."""
+        before = min(int(before), self._stitch.epoch)
+        if before > self._evicted:
+            self._evicted = before
+
+    def _ensure_capacity(self, epoch: int) -> None:
+        """Make physical room for an absolute epoch's row: slide the live
+        window down over dead (evicted) rows when at least half the buffer
+        is dead, else double.  Amortized O(1) per append; capacity stays
+        O(max live window)."""
+        cap = self._commit.shape[0]
+        if epoch - self._phys_base < cap:
+            return
+        # rows physically written so far (the requested epoch's row isn't)
+        filled = min(self._stitch.epoch - self._phys_base, cap)
+        dead = self._evicted - self._phys_base
+        if dead >= cap // 2:
+            live = filled - dead
+            self._commit[:live] = self._commit[dead:filled]
+            self._fmax[:live] = self._fmax[dead:filled]
+            self._phys_base = self._evicted
+            filled = live
+        if epoch - self._phys_base >= cap:
+            new_cap = max(2 * cap, epoch - self._phys_base + 1)
+            grown = np.zeros((new_cap, self.n))
+            grown_f = np.zeros(new_cap)
+            grown[:filled] = self._commit[:filled]
+            grown_f[:filled] = self._fmax[:filled]
+            self._commit = grown
+            self._fmax = grown_f
 
     # -- append --------------------------------------------------------------
 
@@ -227,26 +313,17 @@ class StreamingTimeline:
 
         # this epoch's commit row (node_commit_ms semantics: per-node max
         # delivery over owned transfers, cumulative over epochs, -inf -> 0)
-        row = np.full(self.n, -np.inf)
-        for i, t in enumerate(seg):
-            if t.tag == "clock":
-                continue  # cadence stage: not owned by a real node
-            node = t.src if t.src == t.dst else t.dst
-            f = float(finish[i])
-            if f > row[node]:
-                row[node] = f
+        row = epoch_commit_row(seg, finish, self.n)
         np.maximum(self._acc, row, out=self._acc)
-        if k >= self._commit.shape[0]:
-            grown = np.zeros((2 * self._commit.shape[0], self.n))
-            grown[:k] = self._commit[:k]
-            self._commit = grown
-        self._commit[k] = np.where(np.isfinite(self._acc), self._acc, 0.0)
+        self._ensure_capacity(k)
+        p = k - self._phys_base
+        self._commit[p] = np.where(np.isfinite(self._acc), self._acc, 0.0)
         fmax = float(finish.max()) if len(seg) else 0.0
-        self._finish_max.append(fmax)
+        self._fmax[p] = fmax
 
         return EpochTimings(
             epoch=k,
-            commit_ms=self._commit[k].copy(),
+            commit_ms=self._commit[p].copy(),
             finish_max_ms=fmax,
             start_ms=start,
             finish_ms=finish,

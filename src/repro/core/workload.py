@@ -253,7 +253,13 @@ class TPCCGenerator:
         # seq can collide within (node, epoch) and hand two conflicting
         # writers the same Version
         self._seq = [0] * n_nodes
+        # tpmC accounting must stay O(1) in the horizon (the epoch-sink
+        # pipeline holds the whole run in bounded memory): NewOrder txn ids
+        # are kept for the *latest generated epoch only* — commit-time
+        # intersection is per-epoch anyway — with a cumulative counter for
+        # run totals
         self.neworder_ids: set[int] = set()
+        self.neworder_count = 0
         # warehouses are partitioned across nodes (home warehouses)
         self.home = np.array_split(np.arange(cfg.n_warehouses), n_nodes)
 
@@ -269,6 +275,7 @@ class TPCCGenerator:
         cfg = self.cfg
         probs = np.array(TPCC_MIXES[cfg.mix])
         out: dict[int, list[Txn]] = {}
+        self.neworder_ids = set()
         for node in range(self.n_nodes):
             snap = _node_snapshot(snapshot, node)
             homes = self.home[node]
@@ -315,6 +322,7 @@ class TPCCGenerator:
                 # annotate NewOrder txns for tpmC accounting
                 if ttype == "NewOrder":
                     self.neworder_ids.add(txns[-1].txn_id)
+                    self.neworder_count += 1
             out[node] = txns
         return out
 

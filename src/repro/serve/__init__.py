@@ -12,17 +12,20 @@ with redirect/reject policies and cache-aside accounting.  Wire it through
 
 from .config import ServeConfig
 from .plane import (
+    ServingSink,
     redirect_policy,
     reject_policy,
     simulate_serving,
     view_epochs,
     view_staleness_ms,
 )
-from .stats import EpochServeStats, ServeStats, weighted_percentile
+from .stats import EpochServeStats, ServeStats, ServeTotals, weighted_percentile
 
 __all__ = [
     "ServeConfig",
     "ServeStats",
+    "ServeTotals",
+    "ServingSink",
     "EpochServeStats",
     "simulate_serving",
     "view_epochs",

@@ -43,6 +43,12 @@ class ServeConfig:
     zipf_theta: float = 0.99
     cache_hit_ms: float = 0.05      # in-memory cache lookup
     local_read_ms: float = 0.5      # replica storage-engine read
+    # retain the per-epoch EpochServeStats list on ServeStats.epochs (the
+    # historical surface, O(E)); False keeps only the online ServeTotals +
+    # aggregated latency distribution — required for bounded-memory runs
+    # (EngineConfig(keep_epochs=False); rule table: repro.analysis.
+    # config_check).  Totals and percentiles are identical either way.
+    keep_epochs: bool = True
 
     def __post_init__(self):
         # both imports are deliberately lazy: this module sits on the

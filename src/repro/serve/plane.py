@@ -36,14 +36,17 @@ this repo's stitched streaming simulation):
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from ..core import strategies as _strategies
+from ..core.sinks import EpochContext
 from ..core.workload import ZipfianSampler
 from .config import ServeConfig
-from .stats import EpochServeStats, ServeStats
+from .stats import EpochServeStats, ServeStats, ServeTotals
 
-__all__ = ["simulate_serving", "view_epochs", "view_staleness_ms"]
+__all__ = ["ServingSink", "simulate_serving", "view_epochs", "view_staleness_ms"]
 
 _EPS = 1e-9
 
@@ -105,50 +108,105 @@ def view_staleness_ms(
 # ---------------------------------------------------------------------------
 
 
-def simulate_serving(
-    cfg: ServeConfig,
-    commit_ms: np.ndarray,
-    lats: list[np.ndarray] | tuple[np.ndarray, ...],
-    epoch_ms: float,
-    wall_ms: float,
-) -> ServeStats:
-    """Serve every epoch's client read load against the measured views.
+class ServingSink:
+    """Incremental serving plane: an :class:`~repro.core.sinks.EpochSink`
+    consuming commit rows + the epoch's trace matrix *as they land*.
 
-    ``commit_ms`` is the ``(n_epochs, n_nodes)`` per-node commit-time
-    matrix of the stitched streaming run (``node_commit_ms``); ``lats`` the
-    per-epoch trace latency matrices (redirect RTTs); ``wall_ms`` the
-    run's measured wall-clock (throughput denominator).
+    The batch plane received the full ``(E, n)`` commit matrix at end of
+    run and counted, per serving epoch, how many epochs each node had
+    merged (``view_epochs``).  This sink maintains per-node merged-prefix
+    pointers over a sliding window of pushed commit rows instead, advancing
+    each pointer while the next retained row is delivered by the epoch's
+    serving time, and evicting rows below the slowest pointer — memory
+    O(max view lag · n), not O(E · n).
+
+    **Soundness / byte-identity**: commit columns are non-decreasing
+    (``node_commit_ms`` folds rows with a cumulative max — a requirement on
+    inputs to this plane), so the epochs delivered by ``now`` form a
+    contiguous prefix of the full matrix and the pointer equals the batch
+    count wherever it matters: the two can differ only when *future* rows
+    (epochs ``> e``) are already delivered at ``now = e * epoch_ms``, and
+    then both view counts exceed ``now / epoch_ms``, so both staleness
+    values clamp to exactly ``0.0``.  Every downstream number is a function
+    of the staleness vector, hence byte-identical (``simulate_serving`` is
+    a thin replay through this sink; ``tests/test_sinks.py`` gates a
+    hand-written full-matrix reference against it).
+
+    The latency distribution is aggregated by latency class
+    (value -> summed weight, insertion-ordered) instead of appended per
+    epoch — the serving plane emits a handful of distinct classes, so this
+    is the exact same discrete distribution with per-class weights summed.
+    ``ServeConfig(keep_epochs=False)`` additionally drops the per-epoch
+    ``EpochServeStats`` list (the O(E) remainder); run totals always come
+    from the online :class:`~repro.serve.stats.ServeTotals`.
     """
-    commit_ms = np.asarray(commit_ms, dtype=float)
-    n_epochs, n = commit_ms.shape
-    policy = _strategies.get("serve_policy", cfg.policy)
-    reads = cfg.reads_per_epoch(n, epoch_ms)
-    writes = cfg.writes_per_epoch(n, epoch_ms)
-    if cfg.cache_keys > 0:
-        sampler = ZipfianSampler(
-            cfg.n_keys, cfg.zipf_theta, np.random.default_rng(0)
-        )
-        hit = sampler.top_mass(cfg.cache_keys)
-    else:
-        hit = 0.0
-    bound = float(cfg.max_staleness_ms)
 
-    epochs: list[EpochServeStats] = []
-    lat_values: list[float] = []
-    lat_weights: list[float] = []
+    def __init__(self, cfg: ServeConfig, n: int, epoch_ms: float):
+        self.cfg = cfg
+        self.n = int(n)
+        self.epoch_ms = float(epoch_ms)
+        self._policy = _strategies.get("serve_policy", cfg.policy)
+        self._reads = cfg.reads_per_epoch(self.n, self.epoch_ms)
+        self._writes = cfg.writes_per_epoch(self.n, self.epoch_ms)
+        if cfg.cache_keys > 0:
+            sampler = ZipfianSampler(
+                cfg.n_keys, cfg.zipf_theta, np.random.default_rng(0)
+            )
+            self._hit = sampler.top_mass(cfg.cache_keys)
+        else:
+            self._hit = 0.0
+        self._bound = float(cfg.max_staleness_ms)
+        # sliding window of pushed commit rows: _rows[0] is absolute epoch
+        # _base; rows below every node's merged-prefix pointer are evicted
+        self._rows: list[np.ndarray] = []
+        self._base = 0
+        self._view = np.zeros(self.n, dtype=np.int64)
+        self._next = 0
+        self._epochs: list[EpochServeStats] = []
+        self._totals = ServeTotals()
+        self._lat: dict[float, float] = {}
 
-    def emit(value_ms: float, weight: float):
+    def _emit(self, value_ms: float, weight: float) -> None:
         if weight > 0.0:
-            lat_values.append(float(value_ms))
-            lat_weights.append(float(weight))
+            v = float(value_ms)
+            self._lat[v] = self._lat.get(v, 0.0) + float(weight)
 
-    for e in range(n_epochs):
-        now = e * epoch_ms
-        stal = view_staleness_ms(commit_ms, now, epoch_ms)
-        local, redirect, reject = policy(stal, bound)
+    def push(self, epoch: int, commit_row: np.ndarray, lat: np.ndarray) -> None:
+        """Serve epoch ``epoch``'s client read load against the views
+        implied by the commit rows pushed so far.  ``commit_row`` is the
+        epoch's cumulative per-node commit row (``node_commit_ms[epoch]``
+        semantics — its columns must be non-decreasing across pushes),
+        ``lat`` the epoch's trace latency matrix (redirect RTTs).  Epochs
+        must be pushed in order, exactly once."""
+        if epoch != self._next:
+            raise ValueError(
+                f"ServingSink epochs must arrive in order: got {epoch}, "
+                f"expected {self._next}"
+            )
+        self._next = epoch + 1
+        self._rows.append(np.asarray(commit_row, dtype=float))
+        now = epoch * self.epoch_ms
+        # advance merged-prefix pointers (amortized O(1) per node per epoch:
+        # each pointer only ever moves forward)
+        for i in range(self.n):
+            v = int(self._view[i])
+            while v <= epoch and self._rows[v - self._base][i] <= now + _EPS:
+                v += 1
+            self._view[i] = v
+        stal = np.maximum(now - self._view * self.epoch_ms, 0.0)
+        # rows below the slowest pointer can never be read again
+        floor = int(self._view.min()) if self.n else 0
+        if floor > self._base:
+            del self._rows[: floor - self._base]
+            self._base = floor
+
+        n = self.n
+        reads = self._reads
+        hit = self._hit
+        local, redirect, reject = self._policy(stal, self._bound)
         served_redirect = redirect & ~reject
 
-        lat_e = np.asarray(lats[min(e, len(lats) - 1)], dtype=float)
+        lat_e = np.asarray(lat, dtype=float)
         rtt = lat_e + lat_e.T
         # freshest replica per source: minimum staleness, nearest RTT tie-break
         fresh = stal <= float(stal.min()) + _EPS
@@ -163,20 +221,20 @@ def simulate_serving(
         # latency classes: the cache tier fronts every *served* read at its
         # serving node (local or redirect target), hits and misses split
         # each bucket by the modeled steady-state hit ratio
-        emit(cfg.cache_hit_ms, local_reads * hit)
-        emit(cfg.local_read_ms, local_reads * (1.0 - hit))
+        self._emit(self.cfg.cache_hit_ms, local_reads * hit)
+        self._emit(self.cfg.local_read_ms, local_reads * (1.0 - hit))
         served_remote = 0.0
         for i in np.flatnonzero(served_redirect):
             r = float(rtt[i, target[i]])
-            emit(r + cfg.cache_hit_ms, reads[i] * hit)
-            emit(r + cfg.local_read_ms, reads[i] * (1.0 - hit))
+            self._emit(r + self.cfg.cache_hit_ms, reads[i] * hit)
+            self._emit(r + self.cfg.local_read_ms, reads[i] * (1.0 - hit))
             served_remote += float(reads[i])
 
         served = local_reads + served_remote
-        epochs.append(EpochServeStats(
-            epoch=e,
+        es = EpochServeStats(
+            epoch=epoch,
             reads=float(reads.sum()),
-            writes=float(writes.sum()),
+            writes=float(self._writes.sum()),
             served_local=local_reads,
             stale_served=stale_local,
             redirected=redirected,
@@ -185,13 +243,66 @@ def simulate_serving(
             cache_misses=served * (1.0 - hit),
             view_staleness_ms_mean=float(stal.mean()) if n else 0.0,
             view_staleness_ms_max=float(stal.max()) if n else 0.0,
-        ))
+        )
+        # epoch-order left folds: byte-identical to summing a retained list
+        t = self._totals
+        t.reads += es.reads
+        t.writes += es.writes
+        t.served += es.served
+        t.served_local += es.served_local
+        t.stale_served += es.stale_served
+        t.redirected += es.redirected
+        t.rejected += es.rejected
+        t.cache_hits += es.cache_hits
+        t.cache_misses += es.cache_misses
+        if self.cfg.keep_epochs:
+            self._epochs.append(es)
 
-    return ServeStats(
-        epochs=epochs,
-        latency_values_ms=np.asarray(lat_values, dtype=float),
-        latency_weights=np.asarray(lat_weights, dtype=float),
-        wall_ms=float(wall_ms),
-        max_staleness_ms=bound,
-        policy=cfg.policy,
-    )
+    def on_epoch(self, stats, ctx: EpochContext | None = None) -> None:
+        """EpochSink entry point: serve from the engine's per-epoch push."""
+        if ctx is None or ctx.commit_row is None or ctx.lat is None:
+            raise ValueError(
+                "ServingSink requires an EpochContext carrying the epoch's "
+                "commit_row and lat (streaming engine only)"
+            )
+        self.push(ctx.epoch, ctx.commit_row, ctx.lat)
+
+    def finish(self, wall_ms: float) -> ServeStats:
+        """Assemble the run-level report.  ``wall_ms`` is the run's measured
+        wall-clock (throughput denominator)."""
+        return ServeStats(
+            epochs=list(self._epochs),
+            latency_values_ms=np.asarray(list(self._lat.keys()), dtype=float),
+            latency_weights=np.asarray(list(self._lat.values()), dtype=float),
+            wall_ms=float(wall_ms),
+            max_staleness_ms=self._bound,
+            policy=self.cfg.policy,
+            totals=dataclasses.replace(self._totals),
+        )
+
+
+def simulate_serving(
+    cfg: ServeConfig,
+    commit_ms: np.ndarray,
+    lats,
+    epoch_ms: float,
+    wall_ms: float,
+) -> ServeStats:
+    """Serve every epoch's client read load against the measured views —
+    a thin batch wrapper replaying a full commit matrix through
+    :class:`ServingSink` (the results are identical by construction; the
+    incremental engine drives the sink directly).
+
+    ``commit_ms`` is the ``(n_epochs, n_nodes)`` per-node commit-time
+    matrix of the stitched streaming run (``node_commit_ms`` — its columns
+    are non-decreasing, which the sink's prefix pointers rely on); ``lats``
+    indexes the per-epoch trace latency matrices (redirect RTTs; a list or
+    an :class:`~repro.core.simulator.EpochLatencyCycle`); ``wall_ms`` the
+    run's measured wall-clock (throughput denominator).
+    """
+    commit_ms = np.asarray(commit_ms, dtype=float)
+    n_epochs, n = commit_ms.shape
+    sink = ServingSink(cfg, n, epoch_ms)
+    for e in range(n_epochs):
+        sink.push(e, commit_ms[e], lats[min(e, len(lats) - 1)])
+    return sink.finish(wall_ms)

@@ -13,7 +13,7 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["EpochServeStats", "ServeStats", "weighted_percentile"]
+__all__ = ["EpochServeStats", "ServeStats", "ServeTotals", "weighted_percentile"]
 
 
 def weighted_percentile(
@@ -70,12 +70,36 @@ class EpochServeStats:
 
 
 @dataclasses.dataclass
+class ServeTotals:
+    """Run-level serving counters, accumulated online by
+    :class:`~repro.serve.plane.ServingSink` in epoch order — the same
+    left-fold the ``ServeStats`` summing properties perform over a retained
+    ``epochs`` list, so the totals are byte-identical whether or not the
+    per-epoch list is kept (``ServeConfig(keep_epochs=False)``)."""
+
+    reads: float = 0.0
+    writes: float = 0.0
+    served: float = 0.0
+    served_local: float = 0.0
+    stale_served: float = 0.0
+    redirected: float = 0.0
+    rejected: float = 0.0
+    cache_hits: float = 0.0
+    cache_misses: float = 0.0
+
+
+@dataclasses.dataclass
 class ServeStats:
     """Run-level serving-plane report (attached as ``RunStats.serve``).
 
     ``latency_values_ms`` / ``latency_weights`` hold the exact weighted
-    read-latency distribution (one entry per distinct latency class per
-    epoch); percentiles are computed from it on demand.
+    read-latency distribution (one entry per distinct latency class, with
+    per-class weights summed across epochs); percentiles are computed from
+    it on demand.  ``totals`` carries the online run counters; the summing
+    properties read it when present and fall back to folding ``epochs``
+    (hand-constructed instances, pre-sink pickles).  Under
+    ``ServeConfig(keep_epochs=False)`` the ``epochs`` list is empty and
+    ``totals`` is the only counter surface.
     """
 
     epochs: list[EpochServeStats]
@@ -84,43 +108,62 @@ class ServeStats:
     wall_ms: float
     max_staleness_ms: float
     policy: str
+    totals: ServeTotals | None = None
 
     # -- totals ---------------------------------------------------------------
 
     @property
     def reads_total(self) -> float:
+        if self.totals is not None:
+            return self.totals.reads
         return sum(e.reads for e in self.epochs)
 
     @property
     def writes_total(self) -> float:
+        if self.totals is not None:
+            return self.totals.writes
         return sum(e.writes for e in self.epochs)
 
     @property
     def served_reads(self) -> float:
+        if self.totals is not None:
+            return self.totals.served
         return sum(e.served for e in self.epochs)
 
     @property
     def served_local(self) -> float:
+        if self.totals is not None:
+            return self.totals.served_local
         return sum(e.served_local for e in self.epochs)
 
     @property
     def stale_served(self) -> float:
+        if self.totals is not None:
+            return self.totals.stale_served
         return sum(e.stale_served for e in self.epochs)
 
     @property
     def redirected(self) -> float:
+        if self.totals is not None:
+            return self.totals.redirected
         return sum(e.redirected for e in self.epochs)
 
     @property
     def rejected(self) -> float:
+        if self.totals is not None:
+            return self.totals.rejected
         return sum(e.rejected for e in self.epochs)
 
     @property
     def cache_hits(self) -> float:
+        if self.totals is not None:
+            return self.totals.cache_hits
         return sum(e.cache_hits for e in self.epochs)
 
     @property
     def cache_misses(self) -> float:
+        if self.totals is not None:
+            return self.totals.cache_misses
         return sum(e.cache_misses for e in self.epochs)
 
     # -- rates ---------------------------------------------------------------

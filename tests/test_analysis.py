@@ -291,6 +291,7 @@ def _engine_stub(**overrides):
         streaming=False, barrier=False, staleness_feedback=False,
         serve=None, grouping=False, schedule_name=None,
         resolved_schedule_name="all_to_all", stream_mode="incremental",
+        keep_epochs=True, stats_window=64,
     )
     fields.update(overrides)
     cfg = type("EngineConfig", (), {})()
@@ -303,6 +304,7 @@ def _serve_stub(**overrides):
     fields = dict(
         read_ratio=0.9, max_staleness_ms=150.0, ops_per_client_s=1.0,
         clients_per_node=1000.0, cache_keys=0, n_keys=1000,
+        keep_epochs=True,
     )
     fields.update(overrides)
     cfg = type("ServeConfig", (), {})()

@@ -117,7 +117,9 @@ def test_tpcc_generator_and_engine():
     gen = TPCCGenerator(TPCCConfig(n_warehouses=20, mix="TPCC-A"), n, seed=2)
     rs = eng.run(gen, tr, txns_per_node=6, n_epochs=8)
     assert rs.committed > 0
-    assert len(gen.neworder_ids) > 0
+    # neworder_ids is the latest epoch's annotation set (bounded memory);
+    # the cumulative counter covers the whole run
+    assert gen.neworder_count >= len(gen.neworder_ids) > 0
     # tpmC accounting possible: committed NewOrders <= all NewOrders
     assert rs.committed <= rs.total_txns
 

@@ -1,0 +1,326 @@
+"""Epoch-sink pipeline: bounded-memory runs are byte-identical to retained
+runs.
+
+The refactor's contract is exact equality, not approximation: the online
+``RunSummary`` left-folds the same floats in the same epoch order the old
+``RunStats`` properties folded, the evicting ``StreamingTimeline`` window
+returns the same rows the unbounded history returned, and the incremental
+``ServingSink`` prefix pointers reproduce the batch ``view_epochs`` count
+wherever staleness is nonzero (prefix sufficiency — see the class
+docstring).  Every test here pins ``==`` / ``array_equal``, never approx.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    EpochStats,
+    GeoCluster,
+    GeoClusterSpec,
+    RunAggregator,
+    StreamingTimeline,
+    YCSBConfig,
+    YCSBGenerator,
+    geo_clustered_matrix,
+    jitter_trace,
+    node_commit_ms,
+)
+from repro.analysis import check_config
+from repro.core.whitedata import FilterStats
+from repro.serve import (
+    ServeConfig,
+    ServingSink,
+    simulate_serving,
+    view_staleness_ms,
+)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: bounded run == retained run
+# ---------------------------------------------------------------------------
+
+
+def _run(*, keep_epochs, stats_window=64, feedback=False,
+         stream_mode="incremental", streaming=True, serve=False,
+         n=4, epochs=6, epoch_ms=2.0, seed=7):
+    lat, regions = geo_clustered_matrix(
+        GeoClusterSpec(n_nodes=n, n_clusters=2), np.random.default_rng(1)
+    )
+    trace = jitter_trace(lat, epochs, np.random.default_rng(2))
+    wan = np.asarray(regions)[:, None] != np.asarray(regions)[None, :]
+    bwm = np.where(wan, 200.0, 10_000.0)
+    np.fill_diagonal(bwm, np.inf)
+    serve_cfg = None
+    if serve:
+        serve_cfg = ServeConfig(clients_per_node=50_000.0,
+                                max_staleness_ms=3 * epoch_ms,
+                                cache_keys=50, keep_epochs=keep_epochs)
+    cfg = EngineConfig(n_nodes=n, streaming=streaming, grouping=True,
+                       filtering=True, tiv=True, planner="kcenter",
+                       epoch_ms=epoch_ms, staleness_feedback=feedback,
+                       stream_mode=stream_mode, serve=serve_cfg,
+                       keep_epochs=keep_epochs, stats_window=stats_window,
+                       # modeled (deterministic) CPU costs: measured filter
+                       # wall-clock would differ between the paired runs
+                       modeled_cpu=True)
+    eng = GeoCluster(cfg, bandwidth_mbps=bwm, wan_mask=wan, seed=seed)
+    gen = YCSBGenerator(
+        YCSBConfig(n_keys=200, theta=0.9, read_ratio=0.3, hot_write_frac=0.3,
+                   hot_locality=True),
+        n, seed=3, node_region=regions,
+    )
+    return eng.run(gen, trace, txns_per_node=4, n_epochs=epochs)
+
+
+def _assert_equivalent(bounded, retained, *, window):
+    # the online summary is the same left-fold the retained run performs
+    assert bounded.summary == retained.summary
+    assert bounded.state_digest == retained.state_digest
+    assert bounded.value_digest == retained.value_digest
+    # derived properties route through the summary on both sides
+    assert bounded.committed == retained.committed
+    assert bounded.wall_s == retained.wall_s
+    assert bounded.wan_bytes == retained.wan_bytes
+    # the trailing window is a suffix of the full history
+    kept = bounded.epochs
+    assert len(kept) == min(window, len(retained.epochs))
+    assert kept == retained.epochs[len(retained.epochs) - len(kept):]
+    if retained.serve is not None:
+        b, r = bounded.serve, retained.serve
+        assert b.totals == r.totals
+        assert b.summary() == r.summary()
+        assert np.array_equal(b.latency_values_ms, r.latency_values_ms)
+        assert np.array_equal(b.latency_weights, r.latency_weights)
+        assert b.epochs == []  # the O(E) list is actually dropped
+        assert len(r.epochs) == len(retained.epochs)
+
+
+@pytest.mark.parametrize("stream_mode", ["incremental", "resim"])
+@pytest.mark.parametrize("feedback,window", [(False, 1), (False, 4),
+                                             (True, 2), (True, 64)])
+def test_bounded_run_equivalent_to_retained(feedback, stream_mode, window):
+    retained = _run(keep_epochs=True, feedback=feedback,
+                    stream_mode=stream_mode, serve=True)
+    bounded = _run(keep_epochs=False, stats_window=window, feedback=feedback,
+                   stream_mode=stream_mode, serve=True)
+    _assert_equivalent(bounded, retained, window=window)
+
+
+def test_bounded_run_equivalent_nonstreaming():
+    retained = _run(keep_epochs=True, streaming=False)
+    bounded = _run(keep_epochs=False, stats_window=3, streaming=False)
+    _assert_equivalent(bounded, retained, window=3)
+
+
+def test_window_zero_keeps_no_epochs():
+    rs = _run(keep_epochs=False, stats_window=0)
+    assert rs.epochs == []
+    assert rs.summary is not None and rs.summary.n_epochs == 6
+
+
+# ---------------------------------------------------------------------------
+# RunAggregator: the online fold on synthetic stats
+# ---------------------------------------------------------------------------
+
+
+def _stats(e, *, sync=3.0, wall=2.0, committed=5):
+    return EpochStats(
+        epoch=e, n_txns=8, committed=committed, aborted=8 - committed,
+        sync_ms=sync + 0.1 * e, exec_ms=1.0, wall_ms=wall + 0.01 * e,
+        wan_bytes=100.0 * (e + 1),
+        filter_stats=FilterStats(total_updates=4, kept_updates=3),
+        filter_cpu_ms=0.25, plan_method="kcenter",
+        sync_overlap_ms=0.5, pipeline_overlap_ms=0.125,
+        read_aborts=e % 2, ww_aborts=1, view_lag_mean=float(e % 3),
+        view_lag_max=e % 3,
+    )
+
+
+def test_aggregator_summary_matches_epoch_folds():
+    epochs = [_stats(e) for e in range(7)]
+    agg = RunAggregator(keep_epochs=True)
+    for s in epochs:
+        agg.on_epoch(s)
+    m = agg.summary
+    assert m.n_epochs == 7
+    assert m.n_txns == sum(s.n_txns for s in epochs)
+    assert m.committed == sum(s.committed for s in epochs)
+    assert m.read_aborts == sum(s.read_aborts for s in epochs)
+    # float folds accumulate in epoch order: byte-identical to sum()
+    wall = 0.0
+    for s in epochs:
+        wall += s.wall_ms
+    assert m.wall_ms == wall
+    assert m.sync_ms_max == max(s.sync_ms for s in epochs)
+    assert m.view_lag_max == max(s.view_lag_max for s in epochs)
+    assert m.filter_stats.kept_updates == 7 * 3
+    assert agg.epochs == epochs
+
+
+def test_aggregator_window_is_trailing_suffix():
+    epochs = [_stats(e) for e in range(9)]
+    full = RunAggregator(keep_epochs=True)
+    windowed = RunAggregator(keep_epochs=False, window=4)
+    for s in epochs:
+        full.on_epoch(s)
+        windowed.on_epoch(s)
+    assert windowed.epochs == epochs[-4:]
+    # the summary is over ALL epochs, not just the window
+    assert windowed.summary == full.summary
+
+
+# ---------------------------------------------------------------------------
+# StreamingTimeline: eviction never changes surviving surfaces
+# ---------------------------------------------------------------------------
+
+
+def _timeline_pair(epochs=12, n=3, seed=0):
+    """Build two identical timelines from random all-to-all epochs; evict
+    aggressively on one, never on the other."""
+    from repro.core import all_to_all_schedule
+
+    rng = np.random.default_rng(seed)
+    keep = StreamingTimeline(n, epoch_ms=1.0)
+    evict = StreamingTimeline(n, epoch_ms=1.0)
+    for e in range(epochs):
+        lat = rng.uniform(1.0, 5.0, size=(n, n))
+        np.fill_diagonal(lat, 0.0)
+        sched = all_to_all_schedule(n, payload_bytes=64.0)
+        keep.append_epoch(sched, lat)
+        evict.append_epoch(sched, lat)
+        evict.evict_commit_rows(max(e - 1, 0))  # retain a 2-row tail
+    return keep, evict
+
+
+def test_timeline_eviction_preserves_live_surfaces():
+    keep, evict = _timeline_pair()
+    e = evict.n_epochs
+    assert evict.evicted_epochs == e - 2
+    # live rows and finish marks are identical to the unbounded history
+    assert np.array_equal(evict.commit_ms, keep.commit_ms[e - 2:])
+    assert evict.finish_max_ms == keep.finish_max_ms[e - 2:]
+    for k in range(e - 2, e):
+        for i in range(keep.n):
+            assert evict.commit_at(k, i) == keep.commit_at(k, i)
+    # evicted rows are gone: reading below the frontier is an error
+    with pytest.raises(IndexError):
+        evict.commit_at(e - 3, 0)
+    with pytest.raises(IndexError):
+        evict.commit_row(0)
+
+
+def test_timeline_eviction_bounds_physical_storage():
+    _, evict = _timeline_pair(epochs=200)
+    # a 2-row retention tail must not grow O(E) physical storage: the
+    # compact-or-grow policy keeps capacity proportional to the live span
+    assert evict._commit.shape[0] <= 16
+    assert evict.commit_ms.shape == (2, evict.n)
+
+
+def test_timeline_eviction_is_monotone_and_clamped():
+    _, evict = _timeline_pair(epochs=5)
+    evict.evict_commit_rows(2)          # below current frontier: no-op
+    assert evict.evicted_epochs == 3
+    evict.evict_commit_rows(100)        # clamped to the appended horizon
+    assert evict.evicted_epochs == 5
+    assert evict.commit_ms.shape == (0, evict.n)
+
+
+# ---------------------------------------------------------------------------
+# node_commit_ms windowing
+# ---------------------------------------------------------------------------
+
+
+def test_node_commit_ms_windowed_equals_full_slice():
+    from repro.core import WANSimulator, all_to_all_schedule, stitch_schedules
+
+    rng = np.random.default_rng(3)
+    n, epochs = 3, 6
+    scheds = [all_to_all_schedule(n, payload_bytes=64.0)
+              for _ in range(epochs)]
+    stitched = stitch_schedules(scheds, epoch_ms=1.0, n=n)
+    lat = rng.uniform(1.0, 4.0, size=(n, n))
+    np.fill_diagonal(lat, 0.0)
+    res = WANSimulator(lat, 1000.0).run(stitched)
+    full = node_commit_ms(stitched, res, n, epochs)
+    for start in range(epochs):
+        windowed = node_commit_ms(
+            stitched, res, n, epochs, start_epoch=start,
+            base_row=full[start - 1] if start else None,
+        )
+        assert np.array_equal(windowed, full[start:])
+
+
+# ---------------------------------------------------------------------------
+# ServingSink vs a hand-written full-matrix reference
+# ---------------------------------------------------------------------------
+
+
+def _monotone_commit_matrix(rng, epochs, n, epoch_ms):
+    steps = rng.uniform(0.0, 2.5 * epoch_ms, size=(epochs, n))
+    return np.cumsum(steps, axis=0)
+
+
+@pytest.mark.parametrize("seed,epochs",
+                         [(0, 1), (1, 4), (2, 7), (3, 12), (4, 9), (5, 2)])
+def test_serving_sink_matches_batch_replay(seed, epochs):
+    rng = np.random.default_rng(seed)
+    n, epoch_ms = 3, 2.0
+    commit = _monotone_commit_matrix(rng, epochs, n, epoch_ms)
+    lats = [rng.uniform(1.0, 30.0, size=(n, n)) for _ in range(epochs)]
+    cfg = ServeConfig(clients_per_node=10_000.0, max_staleness_ms=5.0,
+                      cache_keys=20)
+    batch = simulate_serving(cfg, commit, lats, epoch_ms,
+                             wall_ms=epochs * epoch_ms)
+    sink = ServingSink(cfg, n, epoch_ms)
+    for e in range(epochs):
+        sink.push(e, commit[e], lats[e])
+    inc = sink.finish(wall_ms=epochs * epoch_ms)
+    assert inc.totals == batch.totals
+    assert inc.epochs == batch.epochs
+    assert np.array_equal(inc.latency_values_ms, batch.latency_values_ms)
+    assert np.array_equal(inc.latency_weights, batch.latency_weights)
+    # prefix sufficiency: the sink (which only ever saw rows [0, e]) equals
+    # the historical batch form evaluated against the FULL matrix — future
+    # rows delivered "early" can only change the view count where staleness
+    # clamps to 0.0 on both sides
+    for e, se in enumerate(inc.epochs):
+        ref = view_staleness_ms(commit, e * epoch_ms, epoch_ms)
+        assert se.view_staleness_ms_mean == float(ref.mean())
+        assert se.view_staleness_ms_max == float(ref.max())
+
+
+def test_serving_sink_rejects_out_of_order_pushes():
+    cfg = ServeConfig(clients_per_node=1_000.0)
+    sink = ServingSink(cfg, 2, 1.0)
+    sink.push(0, np.zeros(2), np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        sink.push(0, np.zeros(2), np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        sink.push(2, np.zeros(2), np.zeros((2, 2)))
+
+
+def test_serving_sink_requires_context():
+    cfg = ServeConfig(clients_per_node=1_000.0)
+    sink = ServingSink(cfg, 2, 1.0)
+    with pytest.raises(ValueError):
+        sink.on_epoch(_stats(0), None)
+
+
+# ---------------------------------------------------------------------------
+# config rules
+# ---------------------------------------------------------------------------
+
+
+def test_config_rules_for_bounded_runs():
+    # EngineConfig.__post_init__ runs validate_config, so incompatible
+    # configs are rejected at construction
+    with pytest.raises(ValueError, match="stats_window"):
+        EngineConfig(n_nodes=3, stats_window=-1)
+    with pytest.raises(ValueError, match="keep_epochs"):
+        EngineConfig(n_nodes=3, streaming=True, serve=ServeConfig(),
+                     keep_epochs=False)
+    ok = EngineConfig(n_nodes=3, streaming=True,
+                      serve=ServeConfig(keep_epochs=False), keep_epochs=False)
+    assert check_config(ok) == []
