@@ -136,15 +136,47 @@ def main() -> None:
     # static-verification provenance: the gate benchmarks (makespan
     # regression, abort curve) run their engines with verify_schedules on,
     # so this counts transfer DAGs that passed repro.analysis.schedule_check
-    # with zero violations (a violation raises and lands in n_err above)
+    # with zero violations (a violation raises and lands in n_err above).
+    # Snapshot the counter BEFORE the model-check sweep below — its
+    # valid-side verification would otherwise inflate the engine count.
     from repro.analysis.schedule_check import verified_schedule_count
+
+    n_schedules_verified = verified_schedule_count()
+
+    # model-checking provenance: a smoke-scope sweep of the bounded
+    # explicit-state checker (the full quick tier is the CI lint gate;
+    # deep is opt-in), recording violation-free instances per theorem
+    print("\n=== modelcheck: repro.analysis.modelcheck (smoke) ===")
+    t0 = time.perf_counter()
+    from repro.analysis.modelcheck import (
+        reset_model_checked_count,
+        run_tier,
+        scope_for,
+    )
+
+    reset_model_checked_count()
+    mc = run_tier(scope_for("smoke"))
+    if mc.ok:
+        n_pass += 1
+    else:
+        n_fail += 1
+        for theorem in mc.theorems:
+            for v in theorem.violations:
+                print(f"  [FAIL] {v}")
+    print(f"  ({time.perf_counter() - t0:.1f}s)")
 
     all_results["_engine"]["verified"] = {
         "schedule_invariants": "repro.analysis.schedule_check "
                                "(acyclicity, phase monotonicity, epoch "
                                "contiguity, clock chain, payload/node "
                                "bounds)",
-        "schedules_verified": verified_schedule_count(),
+        "schedules_verified": n_schedules_verified,
+        "model_checked": {
+            "scope": "smoke (quick tier gates CI; deep is opt-in)",
+            "ok": mc.ok,
+            "instances": mc.counts(),
+            "selftest_mutants_rejected": mc.mutants_rejected,
+        },
     }
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

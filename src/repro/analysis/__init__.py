@@ -20,13 +20,24 @@ simulated:
   scattered ``raise ValueError`` sites.
 * :mod:`repro.analysis.lint` — repo-specific AST determinism lint
   (wall-clock outside measured branches, module-global RNG, unordered set
-  iteration in digest paths, mutable defaults, bare float ``==`` on
-  simulated times, tracked bytecode).  CLI:
-  ``python -m repro.analysis.lint src/ benchmarks/``.
+  and dict iteration in digest paths, float sums over unordered sources,
+  mutable defaults, bare float ``==`` on simulated times, tracked
+  bytecode).  CLI: ``python -m repro.analysis.lint src/ benchmarks/``.
+* :mod:`repro.analysis.modelcheck` — bounded explicit-state model checker:
+  exhaustive DAG-space sweeps machine-checking the admission theorem and
+  verifier completeness, plus protocol interleaving checks (CRDT merge
+  confluence, OCC epoch atomicity, abort-set monotonicity, streaming
+  eviction safety) and a seeded-mutant selftest.  CLI:
+  ``python -m repro.analysis.modelcheck --tier quick``.
+* :mod:`repro.analysis.mutate` — schedule mutators (one per verifier
+  rule) used by the mutation-corpus gate and the model checker's
+  invalid-side sampling.
 
 Everything here is stdlib-only at import time (numpy/registry imports are
 deferred into the rules that need them), so the lint CLI and the CI gate
-run without the simulation stack installed.
+run without the simulation stack installed.  The model-checker exports
+below are therefore lazy (PEP 562): importing :mod:`repro.analysis` does
+not pull in numpy; touching ``run_tier`` etc. does.
 """
 
 from .config_check import ConfigRule, check_config, validate_config
@@ -53,4 +64,51 @@ __all__ = [
     "validate_config",
     "lint_file",
     "lint_paths",
+    # lazy (numpy-backed) — resolved on first attribute access
+    "ModelCheckReport",
+    "TheoremReport",
+    "THEOREMS",
+    "check_admission",
+    "check_confluence",
+    "check_occ_atomicity",
+    "check_abort_monotonicity",
+    "check_eviction",
+    "model_checked_count",
+    "reset_model_checked_count",
+    "rebuild_counterexample",
+    "run_selftest",
+    "run_tier",
+    "scope_for",
+    "MUTATORS",
+    "mutate_schedule",
 ]
+
+_LAZY = {
+    "MUTATORS": "mutate",
+    "mutate_schedule": "mutate",
+    "ModelCheckReport": "modelcheck",
+    "TheoremReport": "modelcheck",
+    "THEOREMS": "modelcheck",
+    "check_admission": "modelcheck",
+    "check_confluence": "modelcheck",
+    "check_occ_atomicity": "modelcheck",
+    "check_abort_monotonicity": "modelcheck",
+    "check_eviction": "modelcheck",
+    "model_checked_count": "modelcheck",
+    "reset_model_checked_count": "modelcheck",
+    "rebuild_counterexample": "modelcheck",
+    "run_selftest": "modelcheck",
+    "run_tier": "modelcheck",
+    "scope_for": "modelcheck",
+}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}"
+        )
+    import importlib
+
+    return getattr(importlib.import_module(f".{module}", __name__), name)

@@ -27,6 +27,16 @@ rule                   what it refuses
                        validation / winner map, CRDT merge paths).  String
                        hashing is salted per process, so set order is not
                        reproducible across runs — wrap in ``sorted(...)``.
+``unordered-dict-iter`` iterating a dict view (``.keys()``/``.values()``/
+                       ``.items()``) or dict display inside a determinism-
+                       critical function.  Dict order is insertion order,
+                       and in merge/winner paths insertion order is arrival
+                       order — content-deterministic digests must sort.
+``float-sum-unordered`` ``sum()`` over an unordered iterable (set/dict
+                       view) of simulated-time / byte quantities (``*_ms``,
+                       ``*_s``, ``*_bytes``, ``nbytes``).  Float addition
+                       is non-associative, so the accumulation order
+                       changes the total — sort the iterable first.
 ``mutable-default``    mutable default arguments (``def f(x=[])``).
 ``float-time-eq``      bare ``==`` / ``!=`` between simulated-time scalars
                        (identifiers ending in ``_ms``).  Exact equality is
@@ -86,7 +96,7 @@ CRITICAL_FUNCS = {
     "digest", "value_state", "full_state", "merge_updates", "apply_many",
     "merge_store", "validate_epoch", "validate_epoch_detailed",
     "_validate_python", "_validate_numpy",
-    "committed_updates", "_advance_views", "append_epoch",
+    "committed_updates", "_advance_views", "advance_views", "append_epoch",
 }
 
 # Allowlists: entries are a path suffix (posix), optionally "::"-scoped to a
@@ -119,6 +129,8 @@ ALLOWLIST: dict[str, tuple[str, ...]] = {
     ),
     "module-rng": (),
     "unordered-set-iter": (),
+    "unordered-dict-iter": (),
+    "float-sum-unordered": (),
     "mutable-default": (),
     "float-time-eq": (),
 }
@@ -159,6 +171,39 @@ def _is_setish(node: ast.AST) -> bool:
     ):
         return _is_setish(node.left) or _is_setish(node.right)
     return False
+
+
+def _is_dictish(node: ast.AST) -> bool:
+    """Syntactically a dict-typed expression: display, comprehension, or a
+    ``dict()`` call."""
+    if isinstance(node, (ast.Dict, ast.DictComp)):
+        return True
+    return isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+        and node.func.id == "dict"
+
+
+def _is_dict_view(node: ast.AST) -> bool:
+    """A ``.keys()`` / ``.values()`` / ``.items()`` view call — the
+    syntactic marker of dict iteration (a bare name can't be typed
+    statically, exactly like the set rule)."""
+    return isinstance(node, ast.Call) and not node.args \
+        and not node.keywords and isinstance(node.func, ast.Attribute) \
+        and node.func.attr in ("keys", "values", "items")
+
+
+def _float_total_named(node: ast.AST) -> bool:
+    name = None
+    if isinstance(node, ast.Name):
+        name = node.id
+    elif isinstance(node, ast.Attribute):
+        name = node.attr
+    return name is not None and (
+        name == "nbytes" or name.endswith(("_ms", "_s", "_bytes"))
+    )
+
+
+def _mentions_float_total(node: ast.AST) -> bool:
+    return any(_float_total_named(sub) for sub in ast.walk(node))
 
 
 def _time_like(node: ast.AST) -> bool:
@@ -278,18 +323,52 @@ class _Linter(ast.NodeVisitor):
                 "wall-clock: simulated results must not depend on host "
                 "load", node,
             )
+        self._check_float_sum(node)
         self.generic_visit(node)
+
+    # -- rule: float-sum-unordered -------------------------------------------
+
+    def _check_float_sum(self, node: ast.Call) -> None:
+        fn = node.func
+        if not (isinstance(fn, ast.Name) and fn.id == "sum" and node.args):
+            return
+        arg = node.args[0]
+        if isinstance(arg, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            src = arg.generators[0].iter
+            probe: ast.AST = arg.elt
+        else:
+            src = arg
+            probe = arg
+        if (_is_setish(src) or _is_dictish(src) or _is_dict_view(src)) \
+                and _mentions_float_total(probe):
+            self._report(
+                "float-sum-unordered",
+                "sum() over an unordered iterable of *_ms/*_s/*_bytes "
+                "quantities: float addition is non-associative, so the "
+                "accumulation order changes the total — sort the iterable "
+                "first", node,
+            )
 
     # -- rule: unordered-set-iter --------------------------------------------
 
     def _check_iter(self, iter_node: ast.AST) -> None:
-        if self._in_critical_func() and _is_setish(iter_node):
+        if not self._in_critical_func():
+            return
+        if _is_setish(iter_node):
             self._report(
                 "unordered-set-iter",
                 "iterating a set inside a determinism-critical function: "
                 "string hashing is salted per process, so the order feeds "
                 "nondeterminism into digest/winner-map paths — wrap in "
                 "sorted(...)", iter_node,
+            )
+        elif _is_dictish(iter_node) or _is_dict_view(iter_node):
+            self._report(
+                "unordered-dict-iter",
+                "iterating a dict view inside a determinism-critical "
+                "function: dict order is insertion order, which in "
+                "merge/winner paths is arrival order — wrap in "
+                "sorted(...) so digests depend on content only", iter_node,
             )
 
     def visit_For(self, node: ast.For) -> None:

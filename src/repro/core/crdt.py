@@ -102,13 +102,15 @@ class DeltaCRDTStore:
         return sum(self.apply(u) for u in updates)
 
     def merge_store(self, other: "DeltaCRDTStore") -> None:
-        for key, (val, ver) in other._data.items():
+        # sorted: merge outcome is order-independent (LWW), but apply-order
+        # must not depend on the peer's insertion (arrival) order
+        for key, (val, ver) in sorted(other._data.items()):
             self.apply(Update(key, val, ver))
 
     # -- state equality / digests ----------------------------------------------
 
     def value_state(self) -> dict[str, bytes]:
-        return {k: v for k, (v, _) in self._data.items()}
+        return {k: v for k, (v, _) in sorted(self._data.items())}
 
     def full_state(self) -> dict[str, tuple[bytes, Version]]:
         return dict(self._data)

@@ -161,7 +161,7 @@ def _validate_python(
             cand = (t.version, t.txn_id)
             if k not in winners or cand < winners[k]:
                 winners[k] = cand
-    for k, writers in by_key.items():
+    for k, writers in sorted(by_key.items()):
         for t in writers:
             if (t.version, t.txn_id) != winners[k]:
                 ww_aborted.add(t.txn_id)
@@ -215,7 +215,9 @@ def _validate_numpy(
         if rows:
             tid, ep, sq, nd, inv = cols(rows)
             snap = np.empty((len(kid), 3), dtype=np.int64)
-            for key, j in kid.items():
+            # each key writes its own row j, so iteration order cannot
+            # reach the result
+            for key, j in kid.items():  # lint: allow[unordered-dict-iter]
                 sv = snapshot.version_of(key)
                 snap[j] = (sv.epoch, sv.seq, sv.node)
             se, ss, sn = snap[inv, 0], snap[inv, 1], snap[inv, 2]

@@ -90,7 +90,8 @@ from ..analysis.config_check import validate_config
 from ..serve.config import ServeConfig
 from ..serve.stats import ServeStats
 
-__all__ = ["EngineConfig", "EpochStats", "RunStats", "GeoCluster", "RaftCluster"]
+__all__ = ["EngineConfig", "EpochStats", "RunStats", "GeoCluster",
+           "RaftCluster", "advance_views"]
 
 
 @dataclasses.dataclass
@@ -439,6 +440,43 @@ def _compressed_size(updates: Sequence[Update], level: int) -> int:
 
 def _batch_bytes(updates: Sequence[Update]) -> int:
     return sum(u.nbytes for u in updates)
+
+
+def advance_views(
+    n_nodes: int,
+    views: list[DeltaCRDTStore],
+    view_next: np.ndarray,
+    pending_ups: dict[int, list[Update]],
+    commit_at: Callable[[int, int], float],
+    n_done: int,
+    now_ms: float,
+) -> None:
+    """Merge every epoch the stitched simulation has delivered to each
+    node by ``now_ms`` into that node's snapshot view.  Views advance a
+    contiguous epoch prefix (a node merges epoch k only once its k-th
+    inbound transfers have all delivered — the same per-node commit
+    dependency ``stitch_schedules`` gates sends on).
+
+    ``commit_at(k, i)`` reads the measured commit time of epoch ``k`` at
+    node ``i`` for ``k < n_done`` (a point read so the caller may store
+    the matrix in an evicting window); ``pending_ups`` maps epoch ->
+    committed updates and is the *retention frontier's* backing store —
+    entries every view has merged past (``< view_next.min()``) are
+    released here, because no view will ever request them again.
+
+    This is the frontier logic the eviction-safety theorem is about, so it
+    lives at module level where both the engine (``GeoCluster``) and the
+    model checker (:mod:`repro.analysis.modelcheck`) drive the *same*
+    code."""
+    for i in range(n_nodes):
+        nxt = int(view_next[i])
+        while nxt < n_done and commit_at(nxt, i) <= now_ms + 1e-9:
+            views[i].apply_many(pending_ups[nxt])
+            nxt += 1
+        view_next[i] = nxt
+    floor = int(view_next.min()) if len(view_next) else 0
+    for k in [k for k in pending_ups if k < floor]:
+        del pending_ups[k]
 
 
 class GeoCluster:
@@ -906,27 +944,8 @@ class GeoCluster:
         n_done: int,
         now_ms: float,
     ) -> None:
-        """Merge every epoch the stitched simulation has delivered to each
-        node by ``now_ms`` into that node's snapshot view.  Views advance a
-        contiguous epoch prefix (a node merges epoch k only once its k-th
-        inbound transfers have all delivered — the same per-node commit
-        dependency ``stitch_schedules`` gates sends on).
-
-        ``commit_at(k, i)`` reads the measured commit time of epoch ``k`` at
-        node ``i`` for ``k < n_done`` (a point read so the caller may store
-        the matrix in an evicting window); ``pending_ups`` maps epoch ->
-        committed updates and is the *retention frontier's* backing store —
-        entries every view has merged past (``< view_next.min()``) are
-        released here, because no view will ever request them again."""
-        for i in range(self.cfg.n_nodes):
-            nxt = int(view_next[i])
-            while nxt < n_done and commit_at(nxt, i) <= now_ms + 1e-9:
-                views[i].apply_many(pending_ups[nxt])
-                nxt += 1
-            view_next[i] = nxt
-        floor = int(view_next.min()) if len(view_next) else 0
-        for k in [k for k in pending_ups if k < floor]:
-            del pending_ups[k]
+        advance_views(self.cfg.n_nodes, views, view_next, pending_ups,
+                      commit_at, n_done, now_ms)
 
     def _run_streaming(
         self, generator, trace, txns_per_node: int, n_epochs: int,

@@ -1,0 +1,16 @@
+"""Fixture: trips ``unordered-dict-iter`` exactly once — dict-view
+iteration in a determinism-critical function (the sorted one below is
+fine, as is dict iteration outside critical functions)."""
+
+
+def merge_store(data):
+    acc = []
+    for k, v in data.items():
+        acc.append((k, v))
+    for k, v in sorted(data.items()):  # ordered: allowed
+        acc.append((k, v))
+    return acc
+
+
+def helper(data):
+    return [k for k in data.keys()]  # non-critical function: allowed

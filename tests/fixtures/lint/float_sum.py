@@ -1,0 +1,11 @@
+"""Fixture: trips ``float-sum-unordered`` exactly once — ``sum()`` over a
+set of simulated-time quantities (sorted accumulation and ordered
+sources are fine, as are sums of order-insensitive values)."""
+
+
+def total(delays):
+    bad = sum(d_ms for d_ms in {round(d, 3) for d in delays})
+    ok = sum(d_ms for d_ms in sorted({round(d, 3) for d in delays}))
+    also_ok = sum(d_ms for d_ms in delays)  # ordered source: allowed
+    counts = sum(len(str(d)) for d in {round(d, 3) for d in delays})
+    return bad, ok, also_ok, counts

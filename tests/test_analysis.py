@@ -236,6 +236,52 @@ def test_mutation_dep_on_later_epoch_caught():
 
 
 # ---------------------------------------------------------------------------
+# Schedule verifier: auto-generated mutation corpus
+# ---------------------------------------------------------------------------
+# repro.analysis.mutate generalizes the hand-seeded mutations above into one
+# generator per rule; the gate is 100% catch rate and 0 false positives over
+# every builder x topology base (plus the stitched streaming schedule).
+
+
+@pytest.mark.parametrize("topo", sorted(TOPOLOGIES))
+def test_mutation_corpus_catch_rate(topo):
+    from repro.analysis.mutate import MUTATORS
+
+    lat = TOPOLOGIES[topo]
+    n = lat.shape[0]
+    bases = dict(_schedules(lat))
+    bases["stitched"] = _stitched(lat, n_epochs=4)
+    rng = np.random.default_rng(20250807)
+    applicable: set[str] = set()
+    for base_name in sorted(bases):
+        base = bases[base_name]
+        assert verify_schedule(base, n_nodes=n) == []
+        for rule in sorted(MUTATORS):
+            for _ in range(3):
+                mut = MUTATORS[rule](base, rng, n_nodes=n)
+                if mut is None:
+                    continue
+                applicable.add(rule)
+                caught = _rules(verify_schedule(mut, n_nodes=n))
+                assert rule in caught, (
+                    f"{topo}/{base_name}: generated {rule!r} mutant "
+                    f"escaped the verifier (caught: {caught})"
+                )
+        # zero false positives: mutation clones, so the base stays clean
+        assert verify_schedule(base, n_nodes=n) == []
+    # every rule must be expressible somewhere in the base set
+    assert applicable == set(MUTATORS)
+
+
+def test_mutate_schedule_rejects_unknown_rule():
+    from repro.analysis.mutate import mutate_schedule
+
+    sched = all_to_all_schedule(4, PAYLOAD)
+    with pytest.raises(ValueError, match="unknown rule"):
+        mutate_schedule(sched, "no-such-rule", np.random.default_rng(0))
+
+
+# ---------------------------------------------------------------------------
 # Engine wiring: verify_schedules=True
 # ---------------------------------------------------------------------------
 
@@ -375,6 +421,8 @@ def test_real_configs_still_validate():
     ("wallclock.py", "wallclock"),
     ("module_rng.py", "module-rng"),
     ("unordered_set.py", "unordered-set-iter"),
+    ("dict_iter.py", "unordered-dict-iter"),
+    ("float_sum.py", "float-sum-unordered"),
     ("mutable_default.py", "mutable-default"),
     ("float_eq.py", "float-time-eq"),
 ])

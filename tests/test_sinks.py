@@ -227,6 +227,52 @@ def test_timeline_eviction_is_monotone_and_clamped():
     assert evict.commit_ms.shape == (0, evict.n)
 
 
+def test_timeline_frontier_boundary_reads():
+    keep, evict = _timeline_pair(epochs=8)
+    f = evict.evicted_epochs
+    assert f == 6
+    # reads AT the frontier are the live boundary: exact and allowed
+    for i in range(evict.n):
+        assert evict.commit_at(f, i) == keep.commit_at(f, i)
+    assert np.array_equal(evict.commit_row(f), keep.commit_row(f))
+    # one below the frontier: evicted, every read form raises
+    with pytest.raises(IndexError, match="evicted"):
+        evict.commit_at(f - 1, 0)
+    with pytest.raises(IndexError):
+        evict.commit_row(f - 1)
+    # past the appended horizon is equally out of range
+    with pytest.raises(IndexError, match="not yet appended"):
+        evict.commit_at(evict.n_epochs, 0)
+
+
+# ---------------------------------------------------------------------------
+# EpochLatencyCycle: lazy cyclic trace view
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_latency_cycle_wraps_and_bounds():
+    from repro.core.simulator import EpochLatencyCycle
+
+    trace = [np.full((2, 2), float(k)) for k in range(3)]
+    lats = EpochLatencyCycle(trace, n_epochs=8)
+    assert len(lats) == 8
+    for e in range(8):
+        assert np.array_equal(lats[e], trace[e % 3])
+    # the consumer idiom lats[min(e, len - 1)] stays in range past the end
+    assert np.array_equal(lats[min(11, len(lats) - 1)], trace[7 % 3])
+    with pytest.raises(IndexError):
+        lats[8]
+    with pytest.raises(IndexError):
+        lats[-1]
+
+
+def test_epoch_latency_cycle_rejects_empty_trace():
+    from repro.core.simulator import EpochLatencyCycle
+
+    with pytest.raises(ValueError, match="non-empty"):
+        EpochLatencyCycle([], n_epochs=4)
+
+
 # ---------------------------------------------------------------------------
 # node_commit_ms windowing
 # ---------------------------------------------------------------------------
@@ -250,6 +296,34 @@ def test_node_commit_ms_windowed_equals_full_slice():
             base_row=full[start - 1] if start else None,
         )
         assert np.array_equal(windowed, full[start:])
+
+
+def test_node_commit_ms_single_epoch_window_equals_full_row():
+    from repro.core import WANSimulator, all_to_all_schedule, stitch_schedules
+
+    rng = np.random.default_rng(9)
+    n, epochs = 3, 5
+    scheds = [all_to_all_schedule(n, payload_bytes=64.0)
+              for _ in range(epochs)]
+    stitched = stitch_schedules(scheds, epoch_ms=1.0, n=n)
+    lat = rng.uniform(1.0, 4.0, size=(n, n))
+    np.fill_diagonal(lat, 0.0)
+    res = WANSimulator(lat, 1000.0).run(stitched)
+    full = node_commit_ms(stitched, res, n, epochs)
+    # a one-row window anywhere equals the corresponding full-matrix row
+    for start in range(1, epochs):
+        one = node_commit_ms(
+            stitched, res, n, start + 1, start_epoch=start,
+            base_row=full[start - 1],
+        )
+        assert one.shape == (1, n)
+        assert np.array_equal(one[0], full[start])
+    # an empty window (start at the horizon) is a well-formed empty matrix
+    empty = node_commit_ms(
+        stitched, res, n, epochs, start_epoch=epochs,
+        base_row=full[-1],
+    )
+    assert empty.shape == (0, n)
 
 
 # ---------------------------------------------------------------------------
